@@ -1,0 +1,22 @@
+"""Fig 2 reproduction: histogram of tables by row count for each workload."""
+from __future__ import annotations
+
+from repro.core.tables import table_histogram
+from repro.data.workloads import WORKLOADS
+
+
+def run(csv: bool = True):
+    rows = []
+    for name, wl in WORKLOADS.items():
+        hist = table_histogram(wl)
+        total_mb = wl.total_bytes / 2**20
+        buckets = " ".join(f"[{lo}-{hi}):{n}" for lo, hi, n in hist if n)
+        rows.append({"workload": name, "n_tables": len(wl.tables),
+                     "total_mb": round(total_mb, 1), "hist": buckets})
+        if csv:
+            print(f"fig2,{name},{len(wl.tables)},{total_mb:.1f}MB,{buckets}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

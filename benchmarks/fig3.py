@@ -1,0 +1,26 @@
+"""Fig 3 reproduction: high-level conflict-free performance estimation,
+Ascend 910 vs Nvidia A100 (paper) + TPU v5e (our deployment target),
+batch 8192.  The paper reports Ascend at 1.2-1.3x A100 on most workloads."""
+from __future__ import annotations
+
+from repro.data.workloads import WORKLOADS
+from repro.sim.estimate import fig3_estimate
+
+
+def run(csv: bool = True):
+    rows = []
+    for name, wl in WORKLOADS.items():
+        est = fig3_estimate(wl.scaled(8192))
+        ratio = est["ascend910"] / est["a100"]
+        rows.append({"workload": name, **est, "ascend_vs_a100": ratio})
+        if csv:
+            print(
+                f"fig3,{name},ascend910={est['ascend910']:.3g}qps,"
+                f"a100={est['a100']:.3g}qps,tpu_v5e={est['tpu_v5e']:.3g}qps,"
+                f"ascend/a100={ratio:.2f}x(paper:1.2-1.3x)"
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Kernel-level strategy comparison (CPU wall-clock).
+
+Measures the XLA-gather reference vs the four Pallas strategies in interpret
+mode (correctness path) and the partitioned executor's XLA path.  On CPU the
+interpret-mode numbers are NOT performance-representative of TPU — the
+roofline/dry-run artifacts carry the TPU story — but this harness (a) proves
+the code paths run, (b) gives the ref-vs-ref speed baseline used in examples,
+and (c) is the hook real-TPU runs would use unchanged.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies import Strategy
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv: bool = True):
+    rows = []
+    m, e, b, s = 4096, 16, 512, 4
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (m, e), jnp.float32)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, m)
+
+    ref_fn = jax.jit(lambda t, i: ref.embedding_bag_ref(t, i))
+    us = _time(ref_fn, table, idx)
+    rows.append(("xla_gather_ref", us))
+    for strat in Strategy:
+        fn = jax.jit(
+            lambda t, i, st=strat: ops.embedding_bag(t, i, st, interpret=True)
+        )
+        us = _time(fn, table, idx, iters=2)
+        rows.append((f"pallas_{strat.value}_interpret", us))
+    if csv:
+        for name, us in rows:
+            print(f"kernelbench,{name},{us:.1f}us_per_call,m={m}xE={e}xB={b}xs={s}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

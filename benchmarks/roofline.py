@@ -1,0 +1,222 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the dry-run
+artifacts (scan-aware HLO analysis), vs TPU v5e hardware ceilings.
+
+  compute term    = HLO_FLOPs_per_device / 197 TFLOP/s
+  memory term     = HLO_bytes_per_device / 819 GB/s   (fusion-boundary proxy,
+                    upper bound)  +  an analytic minimum-traffic bound
+  collective term = wire bytes per device / 50 GB/s link, with per-kind ring
+                    factors (all-reduce 2(g-1)/g, all-gather/rs (g-1)/g, ...)
+
+MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (inference) + attention
+terms (configs.base.flops_per_token).  The "useful ratio"
+MODEL_FLOPS/HLO_FLOPs flags remat/duplication waste; `roofline_frac` is the
+headline score: useful FLOPs / (peak FLOPs x dominant-term time).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.base import SHAPES, flops_per_token
+from repro.models.registry import ARCH_IDS, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_PER_CHIP = 16 * 2**30
+
+WIRE_FACTOR = {
+    # result-shape bytes -> wire bytes per device (ring schedules)
+    "all-reduce": lambda b, g: 2.0 * b * (g - 1) / max(g, 1),
+    "all-gather": lambda b, g: b * (g - 1) / max(g, 1),
+    "reduce-scatter": lambda b, g: b * max(g - 1, 0),  # result is the shard
+    "all-to-all": lambda b, g: b * (g - 1) / max(g, 1),
+    "collective-permute": lambda b, g: b,
+}
+
+
+DLRM_BATCH = {"serve_8k": 8192, "serve_64k": 65536}
+
+
+def model_flops_per_device(arch: str, shape_name: str, devices: int) -> float:
+    if arch.startswith("dlrm-"):
+        from repro.data.workloads import get_workload
+        from repro.models.dlrm import DLRMConfig
+
+        b = DLRM_BATCH[shape_name]
+        wl = get_workload(arch[len("dlrm-"):], b)
+        cfg = DLRMConfig(arch=arch, workload=wl)
+        mlp = cfg.param_count() - sum(t.rows * t.dim for t in wl.tables)
+        lookups = b * sum(t.seq for t in wl.tables) * cfg.embed_dim
+        n_int = cfg.n_tables + 1
+        inter = b * n_int * n_int * cfg.embed_dim  # pairwise dots
+        return (2.0 * mlp * b + lookups + 2.0 * inter) / devices
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    tokens = shape.batch * (shape.seq if shape.kind != "decode" else 1)
+    return flops_per_token(cfg, shape.seq, shape.kind) * tokens / devices
+
+
+def min_memory_bytes(arch: str, shape_name: str, devices: int) -> float:
+    """Analytic minimum HBM traffic per device per step (lower bound).
+
+    Params/optimizer are fully sharded (ZeRO-3: /devices); activations only
+    shard over the data axes (seq stays whole per device at train shapes), so
+    they divide by dp = devices/16 (the model-axis work is TP'd, not a
+    different token set).
+    """
+    if arch.startswith("dlrm-"):
+        from repro.data.workloads import get_workload
+
+        b = DLRM_BATCH[shape_name]
+        wl = get_workload(arch[len("dlrm-"):], b)
+        # tables touched: one row-read per lookup + pooled outputs + MLPs
+        lookups = b * sum(t.seq for t in wl.tables)
+        return (lookups * wl.tables[0].row_bytes + b * 4096) / devices
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.param_count()
+    n_active = cfg.active_param_count()
+    dp = max(devices // 16, 1)
+    toks_dp = shape.batch * shape.seq / dp
+    d = cfg.d_model
+    layers = cfg.n_layers + cfg.enc_layers
+    if shape.kind == "train":
+        # params read fwd+bwd + write; adam m,v read+write (all fp32, sharded)
+        t = (3 * n * 4 + 4 * n * 4) / devices
+        # checkpointed activations: write fwd, read bwd, + recompute reads
+        t += layers * toks_dp * d * 2 * 3 / 16  # /16: TP splits the d work
+        return t
+    if shape.kind == "prefill":
+        t = 2 * n / devices  # bf16 params, read once (weights stationary)
+        t += layers * toks_dp * d * 2 * 4 / 16
+        t += _cache_bytes(cfg, shape) / devices  # cache write
+        return t
+    # decode: active params + KV/state cache read (sharded over all devices)
+    t = 2 * n_active / devices
+    cache = _cache_bytes(cfg, shape)
+    return t + cache / devices
+
+
+def _cache_bytes(cfg, shape) -> float:
+    if cfg.family == "ssm":
+        sp = cfg.ssm
+        return (
+            cfg.n_layers * shape.batch
+            * (sp.n_heads * sp.head_dim * sp.d_state + (sp.d_inner + 2 * sp.n_groups * sp.d_state) * (sp.d_conv - 1))
+            * 2
+        )
+    cap = min(cfg.window, shape.seq) if cfg.window else shape.seq
+    kv = cfg.n_layers * shape.batch * cap * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+    if cfg.family == "hybrid":
+        sp = cfg.ssm
+        n_inv = cfg.n_layers // cfg.shared_attn_every
+        kv = n_inv * shape.batch * cap * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+        kv += cfg.n_layers * shape.batch * sp.n_heads * sp.head_dim * sp.d_state * 2
+    if cfg.family == "encdec":
+        kv *= 2  # + cross-attention cache
+    return kv
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    arch, shape_name = rec["arch"], rec["shape"]
+    devices = rec.get("devices", 256)
+    hlo = rec["hlo"]
+    compute_s = hlo["flops"] / PEAK_FLOPS
+    memory_s = hlo["bytes"] / HBM_BW
+    gs = hlo.get("collective_group_size", {})
+    coll_s = 0.0
+    for kind, b in hlo["collective_bytes"].items():
+        g = gs.get(kind, 16)
+        coll_s += WIRE_FACTOR.get(kind, lambda b, g: b)(b, max(g, 2)) / LINK_BW
+    mflops = model_flops_per_device(arch, shape_name, devices)
+    min_mem_s = min_memory_bytes(arch, shape_name, devices) / HBM_BW
+    # dominance/score use the ANALYTIC memory term: the HLO-bytes proxy
+    # carries CPU-backend fusion granularity, far coarser than TPU fusion
+    # (kept as a diagnostic upper bound in `memory_s`).
+    terms = {"compute": compute_s, "memory": min_mem_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    # two honest brackets for achievable MFU on the target:
+    #  - no-overlap: every term serializes (collective wire bytes include the
+    #    CPU-partitioner's pessimistic reshards and remat-recomputed
+    #    gathers — a conservative floor);
+    #  - perfect-overlap: comm/memory fully hidden behind the MXU -> MFU is
+    #    limited only by useful-FLOPs fraction of the compiled compute.
+    frac = mflops / (PEAK_FLOPS * t_bound) if t_bound else 0.0
+    useful = mflops / hlo["flops"] if hlo["flops"] else 0.0
+    mfu_overlap = (
+        mflops / (PEAK_FLOPS * compute_s) if compute_s else 0.0
+    )
+    peak_gib = rec["memory"]["peak_estimate_bytes"] / 2**30
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": rec["mesh"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "min_memory_s": min_mem_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops_dev": mflops,
+        "hlo_flops_dev": hlo["flops"],
+        "useful_ratio": useful,
+        "roofline_frac": frac,
+        "mfu_overlap_bound": mfu_overlap,
+        "peak_gib": peak_gib,
+        "fits_hbm": peak_gib <= HBM_PER_CHIP / 2**30,
+    }
+
+
+SUGGESTIONS = {
+    "compute": "raise MXU utilization: fuse small ops; drop causal-masked "
+               "waste via block-triangular attention; bf16 throughout",
+    "memory": "cut HBM traffic: larger fusion (TPU), weights-stationary "
+              "batching, bf16/int8 tables, reuse KV reads across q-chunks",
+    "collective": "shrink wire bytes: reduce-scatter instead of all-reduce, "
+                  "bf16 grads/acts, overlap psum behind layer compute, "
+                  "sequence-parallel norms",
+}
+
+
+def run(csv: bool = True, art_dir: str = "artifacts/dryrun_final", out: str = "artifacts/roofline.md"):
+    rows = []
+    for p in sorted(Path(art_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        r = analyze_record(rec)
+        if r is None:
+            if csv and rec.get("status", "").startswith("skipped"):
+                print(f"roofline,{rec['arch']},{rec['shape']},{rec['mesh']},SKIP")
+            continue
+        rows.append(r)
+        if csv:
+            print(
+                f"roofline,{r['arch']},{r['shape']},{r['mesh']},"
+                f"compute={r['compute_s']:.4g}s,mem={r['memory_s']:.4g}s,"
+                f"minmem={r['min_memory_s']:.4g}s,coll={r['collective_s']:.4g}s,"
+                f"dom={r['dominant']},useful={r['useful_ratio']:.2f},"
+                f"frac_no_overlap={r['roofline_frac']:.3f},"
+                f"mfu_overlap_bound={r['mfu_overlap_bound']:.2f},fits={r['fits_hbm']}"
+            )
+    # markdown
+    lines = [
+        "| arch | shape | mesh | compute s | memory s (HLO) | memory s (min) | collective s | dominant | useful FLOP ratio | frac (no-overlap) | MFU (overlap bound) | peak GiB | next move |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.4g} "
+            f"| {r['memory_s']:.4g} | {r['min_memory_s']:.4g} | {r['collective_s']:.4g} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} "
+            f"| {r['mfu_overlap_bound']:.2f} "
+            f"| {r['peak_gib']:.2f} | {SUGGESTIONS[r['dominant']][:60]}… |"
+        )
+    Path(out).parent.mkdir(parents=True, exist_ok=True)
+    Path(out).write_text("\n".join(lines) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark driver: one section per paper table/figure + roofline.
+
+Prints ``name,...`` CSV lines per benchmark.  The roofline section reads the
+dry-run artifacts if present (run ``python -m repro.launch.dryrun --all``
+first for the full table).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+from pathlib import Path
+
+
+def main() -> None:
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks import fig2, fig3, fig4, kernelbench, roofline, table1
+
+    sections = [
+        ("fig2 (workload histograms)", fig2.run),
+        ("fig3 (high-level estimation)", fig3.run),
+        ("table1 (P99/TPS, 6 workloads x 3 dists x 3 strategies)", table1.run),
+        ("fig4 (throughput-P99 Pareto over batch)", fig4.run),
+        ("kernelbench (strategy kernels, CPU)", kernelbench.run),
+    ]
+    failures = 0
+    for name, fn in sections:
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+    print("# === roofline (from dry-run artifacts) ===", flush=True)
+    try:
+        art = next((p for p in ("artifacts/dryrun_final", "artifacts/dryrun")
+                    if Path(p).exists()), None)
+        if art:
+            roofline.run(art_dir=art)
+        else:
+            print("roofline,SKIPPED,no dry-run artifacts (run repro.launch.dryrun)")
+    except Exception:
+        failures += 1
+        traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

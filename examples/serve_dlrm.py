@@ -1,0 +1,70 @@
+"""Serve a DLRM with batched requests, P99 tracking, and planner comparison.
+
+Run:  PYTHONPATH=src python examples/serve_dlrm.py [--queries 2048]
+
+Queries stream through the Batcher -> partitioned embedding + MLPs on an
+8-device (forced-host) mesh; the latency tracker reports the P99/throughput
+trade-off per placement plan and query distribution — the CPU-scale analogue
+of the paper's Table I measurement loop.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import PartitionedEmbeddingBag, TPU_V5E, analytic_model
+from repro.data.synthetic import ctr_batch
+from repro.data.workloads import small_workload
+from repro.models.dlrm import DLRMConfig, forward_packed, init_dlrm
+from repro.serving.server import Server
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=1024)
+    ap.add_argument("--batch", type=int, default=64)
+    args = ap.parse_args()
+
+    hw = dataclasses.replace(TPU_V5E, l1_bytes=8192)
+    model = analytic_model(hw)
+    wl = small_workload(batch=args.batch)
+    cfg = DLRMConfig(arch="dlrm-serve", workload=wl, embed_dim=16)
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    params = init_dlrm(cfg, jax.random.PRNGKey(0))
+
+    for planner in ("symmetric", "asymmetric"):
+        bag = PartitionedEmbeddingBag(wl, n_cores=4, planner=planner, cost_model=model)
+        packed = bag.pack(params["tables"])
+
+        @jax.jit
+        def infer(dense, indices):
+            return forward_packed(cfg, bag, packed, params, {"dense": dense, "indices": indices}, mesh=mesh)
+
+        def step(payloads):
+            dense = jax.numpy.stack([p["dense"] for p in payloads])
+            idx = jax.numpy.stack([p["indices"] for p in payloads], axis=1)
+            return jax.block_until_ready(infer(dense, idx))
+
+        srv = Server(step, max_batch=args.batch, max_wait_s=0.001)
+        rng = np.random.default_rng(0)
+        for dist in ("uniform", "real", "fixed"):
+            for i in range(args.queries // args.batch):
+                b = ctr_batch(rng, wl, distribution=dist, batch=args.batch)
+                for q in range(args.batch):
+                    srv.submit({"dense": b["dense"][q], "indices": b["indices"][:, q]})
+                srv.pump()
+            srv.drain()
+        s = srv.stats()
+        print(f"{planner:>10s}: p50={s['p50_us']:8.0f}us p99={s['p99_us']:8.0f}us "
+              f"tps={s['tps']:8.0f} hedged={s['hedged_batches']}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

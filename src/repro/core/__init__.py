@@ -1,0 +1,54 @@
+"""Core: the paper's contribution — data-flow strategies, cost model,
+greedy symmetric/asymmetric planners, and the SPMD partitioned executor."""
+
+from repro.core.cost_model import (
+    A100,
+    ASCEND_910,
+    TPU_V5E,
+    CostModel,
+    HardwareSpec,
+    analytic_model,
+)
+from repro.core.embedding import PartitionedEmbeddingBag, stack_indices
+from repro.core.partition import (
+    PackedPlan,
+    pack_plan,
+    partitioned_lookup,
+    vocab_parallel_embed,
+)
+from repro.core.planner import (
+    PLANNERS,
+    plan_asymmetric,
+    plan_baseline,
+    plan_symmetric,
+    predicted_p99,
+)
+from repro.core.strategies import ALL_STRATEGIES, ChunkAssignment, Plan, Strategy
+from repro.core.tables import TableSpec, Workload, make_workload
+
+__all__ = [
+    "A100",
+    "ASCEND_910",
+    "TPU_V5E",
+    "ALL_STRATEGIES",
+    "ChunkAssignment",
+    "CostModel",
+    "HardwareSpec",
+    "PLANNERS",
+    "PackedPlan",
+    "PartitionedEmbeddingBag",
+    "Plan",
+    "Strategy",
+    "TableSpec",
+    "Workload",
+    "analytic_model",
+    "make_workload",
+    "pack_plan",
+    "partitioned_lookup",
+    "plan_asymmetric",
+    "plan_baseline",
+    "plan_symmetric",
+    "predicted_p99",
+    "stack_indices",
+    "vocab_parallel_embed",
+]

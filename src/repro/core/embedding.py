@@ -1,0 +1,110 @@
+"""PartitionedEmbeddingBag — the public API tying planner + executor together.
+
+Usage::
+
+    bag = PartitionedEmbeddingBag(workload, n_cores=mesh.shape["model"],
+                                  planner="asymmetric")
+    params = bag.init(jax.random.PRNGKey(0))        # list of (m_i, E) tables
+    packed = bag.pack(params)                       # placed per the plan
+    pooled = bag.apply(packed, indices, mesh=mesh)  # (N, B, E)
+
+``indices`` is a list of per-table (B, s_i) int arrays or the pre-stacked
+(N, B, s_max) tensor with ``-1`` padding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import planner as planner_lib
+from repro.core.cost_model import CostModel, analytic_model
+from repro.core.partition import PackedPlan, pack_plan, partitioned_lookup
+from repro.core.strategies import Plan
+from repro.core.tables import Workload
+
+
+def stack_indices(indices: Sequence[jax.Array], s_max: int | None = None):
+    """Per-table (B, s_i) index arrays -> (N, B, s_max) with -1 padding."""
+    s_max = s_max or max(i.shape[1] for i in indices)
+    padded = [
+        jnp.pad(i.astype(jnp.int32), ((0, 0), (0, s_max - i.shape[1])), constant_values=-1)
+        for i in indices
+    ]
+    return jnp.stack(padded)
+
+
+@dataclasses.dataclass
+class PartitionedEmbeddingBag:
+    workload: Workload
+    n_cores: int
+    planner: str = "asymmetric"
+    cost_model: CostModel | None = None
+    dtype: jnp.dtype = jnp.float32
+    planner_kwargs: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.cost_model = self.cost_model or analytic_model()
+        plan_fn = planner_lib.PLANNERS[self.planner]
+        self.plan: Plan = plan_fn(
+            self.workload, self.n_cores, self.cost_model, **self.planner_kwargs
+        )
+        self.plan.validate(self.workload.tables)
+        self.s_max = max(t.seq for t in self.workload.tables)
+        self.n_tables = len(self.workload.tables)
+
+    # -- parameters ---------------------------------------------------------
+
+    def init(self, rng: jax.Array) -> list[jax.Array]:
+        keys = jax.random.split(rng, self.n_tables)
+        return [
+            jax.random.normal(k, (t.rows, t.dim), self.dtype)
+            / np.sqrt(t.dim)
+            for k, t in zip(keys, self.workload.tables)
+        ]
+
+    def pack(self, table_data: Sequence[jax.Array] | None) -> PackedPlan:
+        return pack_plan(self.plan, self.workload.tables, table_data, dtype=self.dtype)
+
+    # -- execution ----------------------------------------------------------
+
+    def apply(
+        self,
+        packed: PackedPlan,
+        indices,
+        *,
+        mesh: jax.sharding.Mesh,
+        axis: str = "model",
+        batch_axes: tuple[str, ...] = (),
+        use_kernels: bool = False,
+        reduce_mode: str = "psum",
+    ) -> jax.Array:
+        if isinstance(indices, (list, tuple)):
+            indices = stack_indices(indices, self.s_max)
+        return partitioned_lookup(
+            packed,
+            indices,
+            mesh=mesh,
+            axis=axis,
+            batch_axes=batch_axes,
+            n_tables=self.n_tables,
+            use_kernels=use_kernels,
+            reduce_mode=reduce_mode,
+        )
+
+    def reference(self, table_data, indices) -> jax.Array:
+        """Dense single-device oracle for testing."""
+        if isinstance(indices, (list, tuple)):
+            indices = stack_indices(indices, self.s_max)
+        outs = []
+        for i, t in enumerate(table_data):
+            idx = indices[i]
+            valid = idx >= 0
+            safe = jnp.where(valid, idx, 0)
+            g = jnp.take(t, safe, axis=0)
+            g = jnp.where(valid[..., None], g, jnp.zeros_like(g))
+            outs.append(g.sum(axis=1).astype(jnp.float32))
+        return jnp.stack(outs)

@@ -1,0 +1,437 @@
+"""SPMD execution of a placement :class:`Plan` (paper §III-B on a TPU mesh).
+
+The paper places table *chunks* in individual cores' L1 buffers, subtracts the
+chunk offset from the indices, clips them to avoid out-of-bounds accesses, and
+combines partial pools with atomic inter-core accumulation.  The TPU-native
+rendering (DESIGN.md §2):
+
+* the per-core chunk inventory is materialized as a *stacked slot array*
+  ``(K, max_slots, max_rows+1, E)`` sharded over the ``"model"`` mesh axis —
+  every device holds its own (different!) chunks: the asymmetric layout;
+* each device loops (``lax.scan``) over its slots, performing the
+  offset-subtract / clip / zero-row-redirect lookup with the slot's assigned
+  data-flow strategy (``lax.switch`` over the four Pallas kernels);
+* "atomic inter-core accumulation" is a single ``lax.psum`` over the axis
+  (or a ring reduce-scatter in the overlapped §Perf variant);
+* the LIF symmetric fallback group executes batch-split over the same axis and
+  rejoins with an ``all_gather``.
+
+Every chunk is padded to ``max_rows`` and carries one trailing zero row; all
+invalid lookups (out-of-chunk, sequence padding ``-1``, empty slots, other
+replicas' batch rows) are redirected to the zero row, so no post-hoc masking
+of the pooled result is needed and the pooling can stay fused in the kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.strategies import Plan, Strategy
+from repro.core.tables import TableSpec
+from repro.kernels.embedding_gm import embedding_bag_gm
+from repro.kernels.embedding_l1 import embedding_bag_l1
+from repro.kernels.embedding_ub import embedding_bag_ub
+
+STRATEGY_CODE: dict[Strategy, int] = {
+    Strategy.GM: 0,
+    Strategy.GM_UB: 1,
+    Strategy.L1: 2,
+    Strategy.L1_UB: 3,
+}
+
+_ROW_PAD = 8  # sublane-friendly row padding
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedPlan:
+    """Array-ified Plan. ``chunk_data``/slot metadata are sharded over the
+    core axis; symmetric tables are replicated (small by construction)."""
+
+    # asymmetric slots
+    chunk_data: Any  # (K, S, R+1, E)
+    slot_table: Any  # (K, S) int32, -1 = empty
+    slot_offset: Any  # (K, S) int32
+    slot_rows: Any  # (K, S) int32
+    slot_strategy: Any  # (K, S) int32
+    slot_rep: Any  # (K, S) int32
+    slot_nrep: Any  # (K, S) int32
+    # symmetric fallback group (replicated)
+    sym_data: Any  # (Nsym, Msym+1, E)
+    sym_table: Any  # (Nsym,) int32
+    sym_rows: Any  # (Nsym,) int32
+    sym_strategy: Any  # (Nsym,) int32
+
+    def tree_flatten(self):
+        fields = dataclasses.fields(self)
+        return tuple(getattr(self, f.name) for f in fields), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def n_cores(self) -> int:
+        return self.chunk_data.shape[0]
+
+
+def pack_plan(
+    plan: Plan,
+    tables: Sequence[TableSpec],
+    table_data: Sequence[jax.Array] | None,
+    *,
+    dtype=jnp.float32,
+) -> PackedPlan:
+    """Materialize a Plan into stacked slot arrays.
+
+    ``table_data[i]`` is the (m_i, E) array for table i, or ``None`` for
+    abstract packing (zeros; used by tests/dry-runs that only need shapes).
+    """
+    e = tables[0].dim
+    if any(t.dim != e for t in tables):
+        raise ValueError("all tables must share the embedding dim E")
+    k = plan.n_cores
+    per_core = plan.per_core()
+    max_slots = max((len(v) for v in per_core.values()), default=0)
+    max_slots = max(max_slots, 1)
+    max_rows = max((a.rows for a in plan.assignments), default=1)
+    max_rows = int(-(-max_rows // _ROW_PAD) * _ROW_PAD)
+
+    def tbl(i):
+        if table_data is None:
+            return jnp.zeros((tables[i].rows, e), dtype)
+        return table_data[i].astype(dtype)
+
+    chunk_data = np.zeros((k, max_slots), dtype=object)
+    slot_table = -np.ones((k, max_slots), np.int32)
+    slot_offset = np.zeros((k, max_slots), np.int32)
+    slot_rows = np.zeros((k, max_slots), np.int32)
+    slot_strategy = np.zeros((k, max_slots), np.int32)
+    slot_rep = np.zeros((k, max_slots), np.int32)
+    slot_nrep = np.ones((k, max_slots), np.int32)
+
+    blocks = []
+    for core in range(k):
+        row = []
+        for s_i in range(max_slots):
+            assigns = per_core.get(core, [])
+            if s_i < len(assigns):
+                a = assigns[s_i]
+                slot_table[core, s_i] = a.table_idx
+                slot_offset[core, s_i] = a.row_offset
+                slot_rows[core, s_i] = a.rows
+                slot_strategy[core, s_i] = STRATEGY_CODE[a.strategy]
+                slot_rep[core, s_i] = a.batch_frac[0]
+                slot_nrep[core, s_i] = a.batch_frac[1]
+                if a.row_offset + a.rows > tables[a.table_idx].rows:
+                    raise ValueError("chunk exceeds table rows")
+                chunk = tbl(a.table_idx)[a.row_offset : a.row_offset + a.rows]
+                pad = max_rows + 1 - chunk.shape[0]
+                chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
+            else:
+                chunk = jnp.zeros((max_rows + 1, e), dtype)
+            row.append(chunk)
+        blocks.append(jnp.stack(row))
+    chunk_arr = jnp.stack(blocks)  # (K, S, R+1, E)
+
+    # symmetric group
+    sym_idx = list(plan.symmetric_tables)
+    n_sym = len(sym_idx)
+    if n_sym:
+        msym = max(tables[i].rows for i in sym_idx)
+        msym = int(-(-msym // _ROW_PAD) * _ROW_PAD)
+        sym_blocks = []
+        for i in sym_idx:
+            t = tbl(i)
+            sym_blocks.append(jnp.pad(t, ((0, msym + 1 - t.shape[0]), (0, 0))))
+        sym_data = jnp.stack(sym_blocks)
+        sym_table = np.array(sym_idx, np.int32)
+        sym_rows = np.array([tables[i].rows for i in sym_idx], np.int32)
+        sym_strategy = np.array(
+            [STRATEGY_CODE[s] for s in plan.symmetric_strategies], np.int32
+        )
+    else:
+        sym_data = jnp.zeros((0, 1, e), dtype)
+        sym_table = np.zeros((0,), np.int32)
+        sym_rows = np.zeros((0,), np.int32)
+        sym_strategy = np.zeros((0,), np.int32)
+
+    return PackedPlan(
+        chunk_data=chunk_arr,
+        slot_table=jnp.asarray(slot_table),
+        slot_offset=jnp.asarray(slot_offset),
+        slot_rows=jnp.asarray(slot_rows),
+        slot_strategy=jnp.asarray(slot_strategy),
+        slot_rep=jnp.asarray(slot_rep),
+        slot_nrep=jnp.asarray(slot_nrep),
+        sym_data=sym_data,
+        sym_table=jnp.asarray(sym_table),
+        sym_rows=jnp.asarray(sym_rows),
+        sym_strategy=jnp.asarray(sym_strategy),
+    )
+
+
+# --------------------------------------------------------------------------
+# strategy dispatch on one chunk
+# --------------------------------------------------------------------------
+
+
+def _bag_with_strategy(
+    chunk: jax.Array, lidx: jax.Array, strategy_code: jax.Array, use_kernels: bool
+) -> jax.Array:
+    """(R+1, E) chunk x (B, s) pre-clipped local indices -> (B, E) f32."""
+    if not use_kernels:
+        # XLA gather path: identical math; strategies only differ in timing.
+        return jnp.take(chunk, lidx, axis=0).astype(jnp.float32).sum(axis=1)
+    interp = jax.default_backend() != "tpu"
+    branches = [
+        lambda c, i: embedding_bag_gm(c, i, interpret=interp),
+        lambda c, i: embedding_bag_ub(c, i, persistent=False, interpret=interp),
+        lambda c, i: embedding_bag_l1(c, i, interpret=interp),
+        lambda c, i: embedding_bag_ub(c, i, persistent=True, interpret=interp),
+    ]
+    return lax.switch(strategy_code, branches, chunk, lidx)
+
+
+# --------------------------------------------------------------------------
+# per-device slot sweep
+# --------------------------------------------------------------------------
+
+
+def _local_asym_lookup(
+    packed: PackedPlan, indices: jax.Array, *, n_tables: int, use_kernels
+) -> jax.Array:
+    """indices (N, B, s) -> local partial (N, B, E) f32 (pre-psum).
+
+    ``use_kernels``: False = XLA gather; True = per-slot Pallas strategy
+    kernels (lax.switch); "fused" = ONE multi-slot pallas_call for the whole
+    sweep (amortizes the per-table launch overhead the paper measures).
+    """
+    _, b, _ = indices.shape
+    rpad = packed.chunk_data.shape[-2] - 1  # zero row index
+    e = packed.chunk_data.shape[-1]
+    bpos = jnp.arange(b, dtype=jnp.int32)
+
+    if use_kernels == "fused":
+        return _fused_asym_lookup(packed, indices, n_tables=n_tables)
+
+    def body(out, xs):
+        chunk, ti, off, rows, strat, rep, nrep = xs
+        idx = jnp.take(indices, jnp.maximum(ti, 0), axis=0)  # (B, s)
+        local = idx - off
+        valid = (idx >= 0) & (local >= 0) & (local < rows) & (ti >= 0)
+        # replica r of n serves the r-th contiguous batch 1/n-slice.
+        bmask = (bpos * nrep) // b == rep
+        valid = valid & bmask[:, None]
+        lidx = jnp.where(valid, local, rpad).astype(jnp.int32)
+        pooled = _bag_with_strategy(chunk, lidx, strat, use_kernels)
+        out = out.at[jnp.maximum(ti, 0)].add(
+            jnp.where(ti >= 0, pooled, jnp.zeros_like(pooled))
+        )
+        return out, None
+
+    out0 = jnp.zeros((n_tables, b, e), jnp.float32)
+    xs = (
+        packed.chunk_data,
+        packed.slot_table,
+        packed.slot_offset,
+        packed.slot_rows,
+        packed.slot_strategy,
+        packed.slot_rep,
+        packed.slot_nrep,
+    )
+    out, _ = lax.scan(body, out0, xs)
+    return out
+
+
+def _local_sym_lookup(
+    packed: PackedPlan, idx_slice: jax.Array, *, n_tables: int, use_kernels: bool
+) -> jax.Array:
+    """Symmetric fallback: idx_slice (N, B/K, s) -> (N, B/K, E) f32."""
+    n_sym = packed.sym_data.shape[0]
+    _, bl, _ = idx_slice.shape
+    e = packed.sym_data.shape[-1]
+    out0 = jnp.zeros((n_tables, bl, e), jnp.float32)
+    if n_sym == 0:
+        return out0
+    rpad = packed.sym_data.shape[1] - 1
+
+    def body(out, xs):
+        tbl, ti, rows, strat = xs
+        idx = jnp.take(idx_slice, ti, axis=0)
+        valid = (idx >= 0) & (idx < rows)
+        lidx = jnp.where(valid, idx, rpad).astype(jnp.int32)
+        pooled = _bag_with_strategy(tbl, lidx, strat, use_kernels)
+        return out.at[ti].add(pooled), None
+
+    xs = (packed.sym_data, packed.sym_table, packed.sym_rows, packed.sym_strategy)
+    out, _ = lax.scan(body, out0, xs)
+    return out
+
+
+def _fused_asym_lookup(
+    packed: PackedPlan, indices: jax.Array, *, n_tables: int
+) -> jax.Array:
+    """One fused pallas_call for all slots (kernels/embedding_multi.py)."""
+    from repro.kernels.embedding_multi import multi_embedding_bag
+
+    _, b, _ = indices.shape
+    rpad = packed.chunk_data.shape[-2] - 1
+    e = packed.chunk_data.shape[-1]
+    bpos = jnp.arange(b, dtype=jnp.int32)
+
+    # vectorized slot preprocessing: (S, B, s) pre-clipped local indices
+    ti = packed.slot_table  # (S,)
+    idx = jnp.take(indices, jnp.maximum(ti, 0), axis=0)  # (S, B, s)
+    local = idx - packed.slot_offset[:, None, None]
+    valid = (
+        (idx >= 0)
+        & (local >= 0)
+        & (local < packed.slot_rows[:, None, None])
+        & (ti >= 0)[:, None, None]
+    )
+    bmask = (bpos[None, :] * packed.slot_nrep[:, None]) // b == packed.slot_rep[:, None]
+    valid = valid & bmask[:, :, None]
+    lidx = jnp.where(valid, local, rpad).astype(jnp.int32)
+
+    pooled = multi_embedding_bag(
+        packed.chunk_data, lidx, interpret=jax.default_backend() != "tpu"
+    )  # (S, B, E) f32
+    out = jnp.zeros((n_tables, b, e), jnp.float32)
+    return out.at[jnp.maximum(ti, 0)].add(
+        jnp.where((ti >= 0)[:, None, None], pooled, 0.0)
+    )
+
+
+# --------------------------------------------------------------------------
+# SPMD entry point
+# --------------------------------------------------------------------------
+
+
+def partitioned_lookup(
+    packed: PackedPlan,
+    indices: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis: str = "model",
+    batch_axes: tuple[str, ...] = (),
+    n_tables: int,
+    use_kernels: bool = False,
+    reduce_mode: str = "psum",
+) -> jax.Array:
+    """Execute the plan. indices (N, B, s) int32 -> pooled (N, B, E) f32.
+
+    ``axis`` is the "cores" mesh axis the chunks are sharded over;
+    ``batch_axes`` optionally shards B over data axes (outer DP).
+    ``reduce_mode``: "psum" (paper's atomic accumulation), or "ring"
+    (collective-permute pipelined accumulation — §Perf overlap variant).
+    """
+    bspec = jax.sharding.PartitionSpec(None, batch_axes or None, None)
+
+    def spmd(packed_l, idx):
+        # shard_map leaves a leading size-1 core dim on the sharded arrays.
+        packed_l = dataclasses.replace(
+            packed_l,
+            chunk_data=packed_l.chunk_data[0],
+            slot_table=packed_l.slot_table[0],
+            slot_offset=packed_l.slot_offset[0],
+            slot_rows=packed_l.slot_rows[0],
+            slot_strategy=packed_l.slot_strategy[0],
+            slot_rep=packed_l.slot_rep[0],
+            slot_nrep=packed_l.slot_nrep[0],
+        )
+        out = _local_asym_lookup(
+            packed_l, idx, n_tables=n_tables, use_kernels=use_kernels
+        )
+        if reduce_mode == "ring":
+            out = _ring_psum(out, axis)
+        else:
+            out = lax.psum(out, axis)
+        # symmetric fallback: batch-split over the core axis.
+        k = lax.axis_index(axis)
+        ksz = lax.axis_size(axis)
+        b = idx.shape[1]
+        bl = b // ksz
+        idx_slice = lax.dynamic_slice_in_dim(idx, k * bl, bl, axis=1)
+        sym = _local_sym_lookup(
+            packed_l, idx_slice, n_tables=n_tables, use_kernels=use_kernels
+        )
+        sym = lax.all_gather(sym, axis, axis=1, tiled=True)
+        return out + sym
+
+    pspec = jax.sharding.PartitionSpec
+    packed_specs = PackedPlan(
+        chunk_data=pspec(axis),
+        slot_table=pspec(axis),
+        slot_offset=pspec(axis),
+        slot_rows=pspec(axis),
+        slot_strategy=pspec(axis),
+        slot_rep=pspec(axis),
+        slot_nrep=pspec(axis),
+        sym_data=pspec(),
+        sym_table=pspec(),
+        sym_rows=pspec(),
+        sym_strategy=pspec(),
+    )
+    fn = jax.shard_map(
+        spmd,
+        mesh=mesh,
+        in_specs=(packed_specs, bspec),
+        out_specs=jax.sharding.PartitionSpec(None, batch_axes or None, None),
+        check_vma=False,
+    )
+    return fn(packed, indices)
+
+
+def _ring_psum(x: jax.Array, axis: str) -> jax.Array:
+    """Ring all-reduce via collective_permute; K-1 steps.
+
+    Beyond-paper §Perf: on real hardware XLA overlaps the permute DMA of step
+    t with the add of step t-1 (latency-hiding scheduler), replacing the
+    blocking fused all-reduce at the tail of the slot sweep.
+    """
+    ksz = lax.axis_size(axis)
+    if ksz == 1:
+        return x
+    perm = [(i, (i + 1) % ksz) for i in range(ksz)]
+
+    def step(carry, _):
+        acc, buf = carry
+        buf = lax.ppermute(buf, axis, perm)
+        return (acc + buf, buf), None
+
+    (acc, _), _ = lax.scan(step, (x, x), None, length=ksz - 1)
+    return acc
+
+
+# --------------------------------------------------------------------------
+# vocab-parallel gather (the pool-free chunked case, for LM embeddings)
+# --------------------------------------------------------------------------
+
+
+def vocab_parallel_embed(
+    table_shard: jax.Array,
+    tokens: jax.Array,
+    axis: str,
+) -> jax.Array:
+    """Inside shard_map: (V/K, d) local shard, (B, S) tokens -> (B, S, d).
+
+    This is the paper's offset-subtract + clip + masked lookup + atomic
+    accumulation specialized to s=1 pool-free gathers (== Megatron
+    vocab-parallel embedding; see DESIGN.md §2).
+    """
+    vl = table_shard.shape[0]
+    off = lax.axis_index(axis) * vl
+    local = tokens - off
+    valid = (local >= 0) & (local < vl)
+    lidx = jnp.where(valid, local, 0)
+    emb = jnp.take(table_shard, lidx, axis=0)
+    emb = jnp.where(valid[..., None], emb, jnp.zeros_like(emb))
+    return lax.psum(emb, axis)

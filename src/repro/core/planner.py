@@ -1,0 +1,374 @@
+"""Greedy workload partitioning (paper §III) + beyond-paper extensions.
+
+Three planners, all driven by the linear :class:`CostModel`:
+
+* :func:`plan_baseline`    — every table looked up from global memory, batch
+  split evenly over cores (models the vendor-compiler data flow).
+* :func:`plan_symmetric`   — paper §III-A: one strategy per table, the same
+  table set in every core's L1, batch split evenly.
+* :func:`plan_asymmetric`  — paper §III-B: tables/chunks placed on individual
+  cores (aggregated L1 = K x larger), greedy least-loaded-core assignment,
+  chunking rule, LIF-triggered symmetric fallback.
+
+Beyond-paper (§Perf, opt-in flags):
+
+* ``replicate_hot``   — replication factor > 1 for chunks whose cost dominates
+  a core (paper fixes replication to 1).
+* ``lpt``             — sort by descending *estimated cost* (classic LPT bound
+  for makespan) instead of the paper's (desc seq, asc size) key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.cost_model import CostModel, core_times, lif
+from repro.core.strategies import ChunkAssignment, Plan, Strategy
+from repro.core.tables import TableSpec, Workload
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+
+def _paper_order(tables: Sequence[TableSpec]) -> list[int]:
+    """Sort by descending sequence length, ascending size (paper §III-A)."""
+    return sorted(
+        range(len(tables)), key=lambda i: (-tables[i].seq, tables[i].bytes)
+    )
+
+
+def _lpt_order(tables: Sequence[TableSpec], batch: int, model: CostModel) -> list[int]:
+    def cost(i: int) -> float:
+        return min(
+            model.predict(tables[i], batch, 1, s)
+            for s in (Strategy.L1, Strategy.L1_UB, Strategy.GM, Strategy.GM_UB)
+        )
+
+    return sorted(range(len(tables)), key=lambda i: -cost(i))
+
+
+def predicted_p99(
+    model: CostModel,
+    tables: Sequence[TableSpec],
+    batch: int,
+    plan: Plan,
+) -> float:
+    sym = dict(zip(plan.symmetric_tables, plan.symmetric_strategies))
+    t = core_times(model, tables, batch, plan.assignments, plan.n_cores, sym)
+    return float(t.max()) if len(t) else 0.0
+
+
+# --------------------------------------------------------------------------
+# baseline + symmetric (paper III-A)
+# --------------------------------------------------------------------------
+
+
+def plan_baseline(workload: Workload, n_cores: int, model: CostModel) -> Plan:
+    """Vendor-compiler analog: GM gathers for everything, batch split."""
+    n = len(workload.tables)
+    return Plan(
+        workload_name=workload.name,
+        n_cores=n_cores,
+        assignments=(),
+        symmetric_tables=tuple(range(n)),
+        symmetric_strategies=tuple(Strategy.GM for _ in range(n)),
+        meta={"planner": "baseline"},
+    )
+
+
+def plan_symmetric(
+    workload: Workload, n_cores: int, model: CostModel
+) -> Plan:
+    """Paper §III-A greedy: same tables in every core's L1, batch split K-ways."""
+    tables, batch = workload.tables, workload.batch
+    order = _paper_order(tables)
+    l1_left = model.hardware.l1_bytes
+    strategies: dict[int, Strategy] = {}
+    for i in order:
+        t = tables[i]
+        if t.bytes <= l1_left:
+            strat, _ = model.best_strategy(
+                t, batch, n_cores, (Strategy.L1, Strategy.L1_UB)
+            )
+            l1_left -= t.bytes
+        else:
+            strat, _ = model.best_strategy(
+                t, batch, n_cores, (Strategy.GM, Strategy.GM_UB)
+            )
+        strategies[i] = strat
+    n = len(tables)
+    return Plan(
+        workload_name=workload.name,
+        n_cores=n_cores,
+        assignments=(),
+        symmetric_tables=tuple(range(n)),
+        symmetric_strategies=tuple(strategies[i] for i in range(n)),
+        meta={"planner": "symmetric", "l1_left": l1_left},
+    )
+
+
+# --------------------------------------------------------------------------
+# asymmetric (paper III-B)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Item:
+    table_idx: int
+    row_offset: int
+    rows: int
+    seq: int
+    bytes: int
+
+
+def _chunk_items(
+    tables: Sequence[TableSpec], batch: int, model: CostModel
+) -> list[_Item]:
+    """Paper III-B step 1: split tables larger than L1 into the fewest chunks,
+    but only when the L1 speed-up exceeds the number of chunks."""
+    l1_bytes = model.hardware.l1_bytes
+    items: list[_Item] = []
+    for i, t in enumerate(tables):
+        if t.bytes > l1_bytes and l1_bytes > 0:
+            n_chunks = -(-t.bytes // l1_bytes)
+            gm_cost = min(
+                model.predict(t, batch, 1, Strategy.GM),
+                model.predict(t, batch, 1, Strategy.GM_UB),
+            )
+            chunk_rows = -(-t.rows // n_chunks)
+            chunk_tab = dataclasses.replace(t, rows=chunk_rows)
+            l1_cost = min(
+                model.predict(chunk_tab, batch, 1, Strategy.L1),
+                model.predict(chunk_tab, batch, 1, Strategy.L1_UB),
+            )
+            speedup = gm_cost / max(l1_cost, 1e-30)
+            if speedup > n_chunks:
+                off = 0
+                while off < t.rows:
+                    rows = min(chunk_rows, t.rows - off)
+                    items.append(_Item(i, off, rows, t.seq, rows * t.row_bytes))
+                    off += rows
+                continue
+        items.append(_Item(i, 0, t.rows, t.seq, t.bytes))
+    return items
+
+
+def plan_asymmetric(
+    workload: Workload,
+    n_cores: int,
+    model: CostModel,
+    *,
+    lif_threshold: float = 1.25,
+    lpt: bool = False,
+    replicate_hot: bool = False,
+    max_replicas: int = 4,
+    rock_theta: float = 1.1,
+    shard_rocks: bool = False,
+) -> Plan:
+    """Paper §III-B greedy asymmetric planner.
+
+    0. "big rock" pre-pass (our fix to the paper's greedy, see DESIGN.md):
+       an un-chunkable table whose best single-core cost exceeds
+       ``rock_theta * total_work / K`` (the LPT makespan lower bound) can only
+       hurt the makespan when placed on one core — it goes straight to the
+       symmetric batch-split group (replication=1 per the paper);
+    1. chunk oversized tables (if the L1 speed-up beats the chunk count);
+    2. sort (desc seq, asc size) [or LPT with ``lpt=True``];
+    3. place each item on the least-loaded core; L1 strategies if that core
+       still has L1 room, else GM strategies;
+    4. when LIF >= threshold, the remaining tables fall back to symmetric.
+    """
+    tables, batch = workload.tables, workload.batch
+
+    def best_single_core(t: TableSpec) -> float:
+        cands = [Strategy.GM, Strategy.GM_UB]
+        if model.fits_l1(t):
+            cands += [Strategy.L1, Strategy.L1_UB]
+        return min(model.predict(t, batch, 1, s) for s in cands)
+
+    pre_sym: list[int] = []
+    rock_chunks: list[ChunkAssignment] = []
+    if rock_theta is not None and n_cores > 1:
+        costs = [best_single_core(t) for t in tables]
+        bound = rock_theta * sum(costs) / n_cores
+        chunkable = {
+            it.table_idx
+            for it in _chunk_items(tables, batch, model)
+            if it.rows < tables[it.table_idx].rows
+        }
+        pre_sym = [
+            i
+            for i, c in enumerate(costs)
+            if c > bound and i not in chunkable
+        ]
+        if shard_rocks:
+            # TPU profile (DESIGN.md §2): on a pod every chip has its own
+            # HBM, so the paper's symmetric fallback (replicated tables)
+            # would multiply memory K x.  Rocks are instead row-sharded into
+            # K GM chunks — capacity sharding with the same offset-clip-psum
+            # execution (Megatron-style).
+            for i in pre_sym:
+                t = tables[i]
+                rows = -(-t.rows // n_cores)
+                off = 0
+                core = 0
+                while off < t.rows:
+                    r = min(rows, t.rows - off)
+                    strat, _ = model.best_strategy(
+                        dataclasses.replace(t, rows=r), batch, 1,
+                        (Strategy.GM, Strategy.GM_UB),
+                    )
+                    rock_chunks.append(
+                        ChunkAssignment(i, core % n_cores, off, r, strat)
+                    )
+                    off += r
+                    core += 1
+            pre_sym = []
+
+    placed_elsewhere = set(pre_sym) | {a.table_idx for a in rock_chunks}
+    reduced = Workload(
+        name=workload.name,
+        tables=tuple(t for i, t in enumerate(tables) if i not in placed_elsewhere),
+        batch=batch,
+    )
+    idx_map = [i for i in range(len(tables)) if i not in placed_elsewhere]
+    items = _chunk_items(reduced.tables, batch, model)
+    # re-map chunk items back to original table indices
+    for it in items:
+        it.table_idx = idx_map[it.table_idx]
+    if lpt:
+        key = {
+            id(it): min(
+                model.predict(
+                    dataclasses.replace(tables[it.table_idx], rows=it.rows),
+                    batch,
+                    1,
+                    s,
+                )
+                for s in (Strategy.L1, Strategy.L1_UB, Strategy.GM, Strategy.GM_UB)
+            )
+            for it in items
+        }
+        items.sort(key=lambda it: -key[id(it)])
+    else:
+        items.sort(key=lambda it: (-it.seq, it.bytes))
+
+    load = np.zeros(n_cores)
+    l1_left = np.full(n_cores, float(model.hardware.l1_bytes))
+    assignments: list[ChunkAssignment] = list(rock_chunks)
+    for a in rock_chunks:
+        load[a.core] += model.predict(
+            dataclasses.replace(tables[a.table_idx], rows=a.rows),
+            batch, 1, a.strategy,
+        )
+    def _sym_candidates(t: TableSpec):
+        cands = [Strategy.GM, Strategy.GM_UB]
+        if model.fits_l1(t):
+            cands += [Strategy.L1, Strategy.L1_UB]
+        return tuple(cands)
+
+    sym_tables: list[int] = list(pre_sym)
+    sym_strats: list[Strategy] = [
+        model.best_strategy(tables[i], batch, n_cores, _sym_candidates(tables[i]))[0]
+        for i in pre_sym
+    ]
+    fell_back = False
+
+    for pos, it in enumerate(items):
+        # LIF check (paper step 4): remaining tables go symmetric.  Only
+        # meaningful once every core has work — before that LIF is trivially
+        # K/(#loaded cores).  The TPU profile (shard_rocks) disables the
+        # symmetric fallback: replicating tables multiplies per-chip HBM
+        # (measured 117 GiB/device on dlrm-criteo serve_8k), so imbalance is
+        # left to the greedy balancing + rock pre-pass instead.
+        if (
+            not fell_back
+            and not shard_rocks
+            and np.all(load > 0)
+            and lif(load) >= lif_threshold
+        ):
+            fell_back = True
+        if fell_back:
+            # whole tables only — chunks of an already-started table must be
+            # completed asymmetrically to preserve coverage.
+            started = {a.table_idx for a in assignments}
+            if it.table_idx not in started:
+                if it.table_idx not in sym_tables:
+                    t = tables[it.table_idx]
+                    strat, _ = model.best_strategy(
+                        t, batch, n_cores, (Strategy.GM, Strategy.GM_UB)
+                    )
+                    sym_tables.append(it.table_idx)
+                    sym_strats.append(strat)
+                continue
+
+        core = int(np.argmin(load))
+        chunk_tab = dataclasses.replace(tables[it.table_idx], rows=it.rows)
+        if it.bytes <= l1_left[core]:
+            strat, cost = model.best_strategy(
+                chunk_tab, batch, 1, (Strategy.L1, Strategy.L1_UB)
+            )
+            l1_left[core] -= it.bytes
+        else:
+            strat, cost = model.best_strategy(
+                chunk_tab, batch, 1, (Strategy.GM, Strategy.GM_UB)
+            )
+
+        replicas = 1
+        if (
+            replicate_hot
+            and n_cores > 1
+            and load.sum() > 0
+            and cost > 2.0 * (load.sum() / n_cores)
+        ):
+            # beyond-paper: split this chunk's batch over r cores.
+            replicas = min(max_replicas, n_cores)
+        if replicas == 1:
+            assignments.append(
+                ChunkAssignment(it.table_idx, core, it.row_offset, it.rows, strat)
+            )
+            load[core] += cost
+        else:
+            rep_cost = model.predict(chunk_tab, batch // replicas, 1, strat)
+            for r in range(replicas):
+                c = int(np.argmin(load))
+                if strat.is_l1 and it.bytes <= l1_left[c]:
+                    l1_left[c] -= it.bytes
+                assignments.append(
+                    ChunkAssignment(
+                        it.table_idx,
+                        c,
+                        it.row_offset,
+                        it.rows,
+                        strat,
+                        batch_frac=(r, replicas),
+                    )
+                )
+                load[c] += rep_cost
+
+    plan = Plan(
+        workload_name=workload.name,
+        n_cores=n_cores,
+        assignments=tuple(assignments),
+        symmetric_tables=tuple(sym_tables),
+        symmetric_strategies=tuple(sym_strats),
+        meta={
+            "planner": "asymmetric" + ("+lpt" if lpt else "")
+            + ("+rep" if replicate_hot else ""),
+            "lif": float(lif(load)) if load.sum() else 1.0,
+            "fell_back": fell_back,
+        },
+    )
+    plan.validate(tables)
+    return plan
+
+
+PLANNERS = {
+    "baseline": plan_baseline,
+    "symmetric": plan_symmetric,
+    "asymmetric": plan_asymmetric,
+}

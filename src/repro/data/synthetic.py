@@ -1,0 +1,70 @@
+"""Synthetic query generators for the three paper distributions (§IV-A).
+
+* uniform — stress test for caches (random rows);
+* fixed   — all indices the same value (bank/line-conflict stress test);
+* real    — "pseudo-realistic": zipf-distributed rows matching the dataset's
+  long-tail statistics (per-table ``zipf_alpha``).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tables import TableSpec, Workload
+
+
+def sample_indices(
+    rng: np.random.Generator,
+    table: TableSpec,
+    batch: int,
+    distribution: str = "real",
+) -> np.ndarray:
+    """(batch, seq) int32 lookup indices for one table."""
+    shape = (batch, table.seq)
+    m = table.rows
+    if distribution == "uniform":
+        return rng.integers(0, m, shape, dtype=np.int64).astype(np.int32)
+    if distribution == "fixed":
+        v = int(rng.integers(0, m))
+        return np.full(shape, v, np.int32)
+    if distribution == "real":
+        a = max(table.zipf_alpha, 1.0001)
+        # inverse-CDF zipf approximation, clipped to the table
+        u = np.maximum(rng.random(shape), 1e-12)
+        ranks = np.floor(
+            np.minimum(u ** (-1.0 / (a - 1.0)), float(m))
+        ).astype(np.int64)
+        ranks = np.clip(ranks - 1, 0, m - 1)
+        # hot rows are spread over the id space (hash the rank)
+        return ((ranks * 2654435761) % m).astype(np.int32)
+    raise ValueError(distribution)
+
+
+def query_batch(
+    rng: np.random.Generator,
+    workload: Workload,
+    distribution: str = "real",
+    batch: int | None = None,
+) -> np.ndarray:
+    """Stacked (N_tables, B, s_max) indices with -1 seq padding."""
+    batch = batch or workload.batch
+    s_max = max(t.seq for t in workload.tables)
+    out = np.full((len(workload.tables), batch, s_max), -1, np.int32)
+    for i, t in enumerate(workload.tables):
+        out[i, :, : t.seq] = sample_indices(rng, t, batch, distribution)
+    return out
+
+
+def ctr_batch(
+    rng: np.random.Generator,
+    workload: Workload,
+    n_dense: int = 13,
+    distribution: str = "real",
+    batch: int | None = None,
+) -> dict:
+    """A full DLRM training/serving batch (dense + indices + labels)."""
+    batch = batch or workload.batch
+    return {
+        "dense": rng.standard_normal((batch, n_dense)).astype(np.float32),
+        "indices": query_batch(rng, workload, distribution, batch),
+        "labels": (rng.random(batch) < 0.25).astype(np.float32),
+    }

@@ -1,0 +1,89 @@
+"""Fused multi-table (multi-slot) embedding-bag kernel.
+
+The asymmetric executor's inner loop is "for each chunk slot: pooled lookup"
+— per-slot kernel launches dominate for workloads with many small tables
+(the paper's per-table launch overhead, §IV).  This kernel fuses the whole
+slot sweep into ONE ``pallas_call``:
+
+* grid = (slots, batch tiles); each grid step brings slot ``si``'s chunk
+  HBM→VMEM via its BlockSpec (double-buffered across slots by the pipeline —
+  GM-style streaming at chunk granularity, VMEM-resident across the batch
+  tiles of that slot because the batch axis iterates minor);
+* indices arrive scalar-prefetched, pre-clipped to the slot's local row
+  space with invalid lookups redirected to the trailing zero row (the same
+  convention as core.partition).
+
+Output: (slots, B, E) pooled partials, scatter-added per table by the caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _multi_kernel(idx_ref, chunk_ref, out_ref, *, block_b: int, seq: int, batch: int):
+    si = pl.program_id(0)
+    bi = pl.program_id(1)
+
+    def query(r, _):
+        def lookup(j, acc):
+            idx = idx_ref[(si * batch + bi * block_b + r) * seq + j]
+            row = chunk_ref[0]  # (R+1, E)
+            return acc + jax.lax.dynamic_slice_in_dim(row, idx, 1, axis=0).astype(
+                jnp.float32
+            )
+
+        acc = jax.lax.fori_loop(
+            0, seq, lookup, jnp.zeros((1, chunk_ref.shape[-1]), jnp.float32)
+        )
+        out_ref[0, r, :] = acc[0]
+        return _
+
+    jax.lax.fori_loop(0, block_b, query, None)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def multi_embedding_bag(
+    chunks: jax.Array,  # (S, R+1, E) — slot chunk stack, trailing zero row
+    lidx: jax.Array,  # (S, B, s) int32, pre-clipped local indices
+    *,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """All slots' pooled lookups in one pallas_call -> (S, B, E) f32."""
+    s_slots, rpad, e = chunks.shape
+    _, b, seq = lidx.shape
+    block_b = min(block_b, b)
+    pad_b = (-b) % block_b
+    if pad_b:
+        lidx = jnp.pad(lidx, ((0, 0), (0, pad_b), (0, 0)))
+    bp = b + pad_b
+    flat_idx = lidx.reshape(-1).astype(jnp.int32)
+
+    kernel = functools.partial(
+        _multi_kernel, block_b=block_b, seq=seq, batch=bp
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(s_slots, bp // block_b),
+            in_specs=[
+                # slot chunk: fetched per slot, resident across batch tiles
+                pl.BlockSpec((1, rpad, e), lambda si, bi, idx: (si, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, block_b, e), lambda si, bi, idx: (si, bi, 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((s_slots, bp, e), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(flat_idx, chunks)
+    return out[:, :b]

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the embedding lookup kernels.
+
+These are the correctness references every Pallas kernel is checked against
+(shape/dtype sweeps in tests/test_kernels_embedding.py), and double as the
+XLA-native "vendor compiler" baseline data flow for measured comparisons.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jax.Array,
+    indices: jax.Array,
+    *,
+    pooling: str = "sum",
+) -> jax.Array:
+    """Gather + pool. table (m, E), indices (B, s) int -> (B, E)."""
+    g = jnp.take(table, indices, axis=0)  # (B, s, E)
+    if pooling == "sum":
+        out = g.sum(axis=1)
+    elif pooling == "mean":
+        out = g.mean(axis=1)
+    else:
+        raise ValueError(f"unknown pooling {pooling!r}")
+    return out.astype(table.dtype)
+
+
+def gather_ref(table: jax.Array, indices: jax.Array) -> jax.Array:
+    """Plain row gather. table (m, E), indices (...,) -> (..., E)."""
+    return jnp.take(table, indices, axis=0)
+
+
+def chunk_bag_ref(
+    chunk: jax.Array,
+    indices: jax.Array,
+    row_offset: int | jax.Array,
+    *,
+    pooling: str = "sum",
+) -> jax.Array:
+    """The paper's offset-subtract + clip + mask partial lookup (§III-B).
+
+    ``chunk`` holds rows [row_offset, row_offset+rows) of the full table.
+    Out-of-chunk indices contribute zero; summing the results over all chunks
+    of a table (the "atomic inter-core accumulation") recovers
+    ``embedding_bag_ref`` exactly.
+    """
+    rows = chunk.shape[0]
+    local = indices - row_offset
+    in_range = (local >= 0) & (local < rows)
+    clipped = jnp.clip(local, 0, rows - 1)
+    g = jnp.take(chunk, clipped, axis=0)  # (B, s, E)
+    g = jnp.where(in_range[..., None], g, jnp.zeros_like(g))
+    if pooling == "sum":
+        out = g.sum(axis=1)
+    elif pooling == "mean":
+        out = g.sum(axis=1) / indices.shape[-1]
+    else:
+        raise ValueError(f"unknown pooling {pooling!r}")
+    return out.astype(chunk.dtype)
+
+
+def chunk_gather_ref(
+    chunk: jax.Array, indices: jax.Array, row_offset: int | jax.Array
+) -> jax.Array:
+    """Pool-free chunked gather (vocab-parallel embedding partial)."""
+    rows = chunk.shape[0]
+    local = indices - row_offset
+    in_range = (local >= 0) & (local < rows)
+    clipped = jnp.clip(local, 0, rows - 1)
+    g = jnp.take(chunk, clipped, axis=0)
+    return jnp.where(in_range[..., None], g, jnp.zeros_like(g))

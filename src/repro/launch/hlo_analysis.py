@@ -1,0 +1,275 @@
+"""Scan-aware analysis of compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts ``while`` bodies exactly once, so a
+layer-scanned model under-reports FLOPs/bytes by ~n_layers x.  XLA writes the
+static trip count into each while's ``backend_config`` ("known_trip_count"),
+so this module re-derives per-device totals by walking the computation graph
+with trip-count multipliers:
+
+* FLOPs: dots (2 * prod(result) * contracted), elementwise arithmetic,
+  reduces — fusion bodies included;
+* bytes: fusion-boundary traffic only (operands + results of top-level ops) —
+  a proxy for HBM traffic on the TPU target;
+* collectives: per-kind byte totals (result-shape bytes x trips) + group
+  sizes, feeding the roofline's collective term.
+
+Everything is parsed from ``compiled.as_text()``; per-device (the module is
+the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "log", "negate", "abs", "rsqrt", "sqrt", "select",
+    "compare", "and", "or", "xor", "not", "sign", "floor", "ceil", "convert",
+    "exponential-minus-one", "log-plus-one", "sine", "cosine", "atan2",
+    "remainder", "clamp", "logistic", "erf",
+}
+
+
+def _shape_bytes(dtype: str, dims: str) -> tuple[int, int]:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n, n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_elems: int
+    result_bytes: int
+    operands: list[str]
+    line: str
+    result_dims: tuple[int, ...] = ()
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+
+
+def parse_module(text: str) -> tuple[dict[str, Computation], str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if line.rstrip().endswith("{") and ("->" in line):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [])
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_part, op, rest = m.groups()
+        elems = bytes_ = 0
+        first_dims: tuple[int, ...] = ()
+        for idx, (dt, dims) in enumerate(_SHAPE_RE.findall(result_part)):
+            e, b = _shape_bytes(dt, dims)
+            elems += e
+            bytes_ += b
+            if idx == 0:
+                first_dims = tuple(int(x) for x in dims.split(",")) if dims else ()
+        # operand names: first balanced paren group
+        depth, args_end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args_end = i
+                    break
+        operands = re.findall(r"%([\w\.\-]+)", rest[:args_end])
+        cur.instrs.append(
+            Instr(name, op, elems, bytes_, operands, line.strip(), first_dims)
+        )
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comps, entry
+
+
+def _dot_flops(instr: Instr, symtab) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.line)
+    contracted = 1
+    lhs_dims: tuple[int, ...] = ()
+    if instr.operands and instr.operands[0] in symtab:
+        lhs_dims = symtab[instr.operands[0]][2]
+    if m and lhs_dims:
+        for ci in m.group(1).split(","):
+            if ci:
+                contracted *= lhs_dims[int(ci)]
+    return 2.0 * instr.result_elems * contracted
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    collective_count: dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int)
+    )
+    group_size: dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "HloCost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] += v * mult
+        for k, v in other.collective_count.items():
+            self.collective_count[k] += int(v * mult)
+        for k, v in other.group_size.items():
+            self.group_size[k] = max(self.group_size.get(k, 0), v)
+
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": dict(self.collective_bytes),
+            "collective_count": dict(self.collective_count),
+            "collective_group_size": dict(self.group_size),
+        }
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps, entry = parse_module(text)
+    # symbol table: instr name -> (elems, bytes, dims)
+    symtab: dict[str, tuple[int, int, tuple[int, ...]]] = {}
+    for c in comps.values():
+        for i in c.instrs:
+            symtab[i.name] = (i.result_elems, i.result_bytes, i.result_dims)
+
+    memo: dict[tuple[str, bool], HloCost] = {}
+
+    def comp_cost(name: str, in_fusion: bool) -> HloCost:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        cost = HloCost()
+        comp = comps.get(name)
+        if comp is None:
+            memo[key] = cost
+            return cost
+        for instr in comp.instrs:
+            op = instr.op
+            if op == "fusion":
+                callee = _CALL_RE.search(instr.line)
+                if callee:
+                    cost.add(comp_cost(callee.group(1), True))
+                # fusion boundary traffic
+                cost.bytes += instr.result_bytes + sum(
+                    symtab.get(o, (0, 0, ()))[1] for o in instr.operands
+                )
+                continue
+            if op == "while":
+                trip = 1
+                m = _TRIP_RE.search(instr.line)
+                if m:
+                    trip = int(m.group(1))
+                body = re.search(r"body=%?([\w\.\-]+)", instr.line)
+                if body:
+                    cost.add(comp_cost(body.group(1), False), trip)
+                continue
+            if op == "conditional":
+                m = _COND_BRANCH_RE.search(instr.line)
+                if m:
+                    branches = re.findall(r"%?([\w\.\-]+)", m.group(1))
+                    if branches:
+                        worst = HloCost()
+                        for bname in branches:
+                            c = comp_cost(bname, False)
+                            if c.flops >= worst.flops:
+                                worst = c
+                        cost.add(worst)
+                continue
+            if op in ("call", "async-start"):
+                callee = _CALL_RE.search(instr.line)
+                if callee:
+                    cost.add(comp_cost(callee.group(1), in_fusion))
+                continue
+            if op in COLLECTIVES or op.startswith(tuple(c + "-start" for c in COLLECTIVES)):
+                kind = next(
+                    (c for c in COLLECTIVES if op == c or op.startswith(c)), op
+                )
+                cost.collective_bytes[kind] += instr.result_bytes
+                cost.collective_count[kind] += 1
+                g = _GROUPS_IOTA_RE.search(instr.line)
+                if g:
+                    cost.group_size[kind] = max(
+                        cost.group_size.get(kind, 0), int(g.group(2))
+                    )
+                else:
+                    gl = _GROUPS_LIST_RE.search(instr.line)
+                    if gl:
+                        n = len([x for x in gl.group(1).split(",") if x.strip()])
+                        cost.group_size[kind] = max(cost.group_size.get(kind, 0), n)
+                if not in_fusion:
+                    cost.bytes += instr.result_bytes
+                continue
+            # flops
+            if op == "dot":
+                cost.flops += _dot_flops(instr, symtab)
+            elif op in _ELEMENTWISE:
+                cost.flops += instr.result_elems
+            elif op in ("reduce", "reduce-window"):
+                cost.flops += sum(symtab.get(o, (0, 0, ()))[0] for o in instr.operands)
+            elif op == "convolution":
+                # rough: 2 * result * (operand0 elems / result spatial) — rare
+                cost.flops += 2.0 * instr.result_elems
+            # bytes: fusion-boundary traffic only at top level
+            if not in_fusion and op not in (
+                "parameter", "constant", "tuple", "get-tuple-element",
+                "bitcast", "after-all",
+            ):
+                cost.bytes += instr.result_bytes + sum(
+                    symtab.get(o, (0, 0, ()))[1] for o in instr.operands
+                )
+        memo[key] = cost
+        return cost
+
+    return comp_cost(entry, False)

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (data x model);
+multi-pod: 2 pods x 256 = 512 chips with a leading "pod" axis.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Tiny mesh (8/16 fake devices) with the same axis structure, for tests."""
+    shape = (2, 2, 4) if multi_pod else (2, 4)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )

@@ -1,0 +1,89 @@
+"""Training entrypoint.
+
+CPU-scale (reduced configs) it actually trains; at full scale it drives the
+same step functions the dry-run lowers.  Examples::
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke --steps 20
+    PYTHONPATH=src python -m repro.launch.train --arch dlrm --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES, ShapeCfg
+from repro.models import registry
+from repro.training.loop import LoopConfig, train
+from repro.training.optimizer import adagrad, adamw
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="olmo-1b",
+                   choices=list(registry.ARCH_IDS) + ["dlrm"])
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--smoke", action="store_true", default=True,
+                   help="reduced config (full configs need a real pod)")
+    p.add_argument("--batch", type=int, default=32)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--checkpoint-dir", default="checkpoints")
+    p.add_argument("--checkpoint-every", type=int, default=25)
+    p.add_argument("--grad-compression", action="store_true")
+    args = p.parse_args(argv)
+
+    if args.arch == "dlrm":
+        from repro.core.tables import make_workload
+        from repro.data.synthetic import ctr_batch
+        from repro.models.dlrm import DLRMConfig, init_dlrm, make_dlrm_train_step
+
+        wl = make_workload(
+            "train-cli", [100_000, 50_000, 10_000, 1_000, 100],
+            dim=16, batch=args.batch,
+        )
+        cfg = DLRMConfig(arch="dlrm-cli", workload=wl)
+        opt = adagrad(args.lr * 10)
+        step_fn = make_dlrm_train_step(cfg, opt)
+
+        def init_state():
+            params = init_dlrm(cfg, jax.random.PRNGKey(0))
+            return params, opt.init(params)
+
+        def batch_fn(step):
+            b = ctr_batch(np.random.default_rng(step), wl, batch=args.batch)
+            return {k: jax.numpy.asarray(v) for k, v in b.items()}
+    else:
+        bundle = registry.build(args.arch, smoke=args.smoke)
+        shape = ShapeCfg("cli", "train", args.seq, args.batch)
+        opt = adamw(args.lr)
+        step_fn = bundle.train_step(None, opt, shape)
+
+        def init_state():
+            params = bundle.init(jax.random.PRNGKey(0))
+            return params, opt.init(params)
+
+        def batch_fn(step):
+            return bundle.make_batch(shape, jax.random.PRNGKey(step))
+
+    out = train(
+        LoopConfig(
+            total_steps=args.steps,
+            checkpoint_every=args.checkpoint_every,
+            checkpoint_dir=args.checkpoint_dir,
+            grad_compression=args.grad_compression,
+        ),
+        init_state=init_state,
+        step_fn=step_fn,
+        batch_fn=batch_fn,
+        on_step=lambda s, m: s % 10 == 0 and print(
+            f"[train] step {s:5d} loss {m['loss']:.4f} ({m['sec']*1e3:.0f} ms)"
+        ),
+    )
+    print(f"[train] done: loss {out['first_loss']:.4f} -> {out['final_loss']:.4f}, "
+          f"{out['mean_step_s']*1e3:.0f} ms/step, resumed_from={out['start_step']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,439 @@
+"""Model primitives, pure JAX (no flax): params are nested dicts of arrays.
+
+Covers every attention/norm/positional variant needed by the assigned
+architectures: GQA with grouped-head einsums, chunked online-softmax
+(flash-style) attention with causal + sliding-window masks and KV caches,
+RoPE (standard / partial "2d" / M-RoPE sections), qk-norm, RMS/Layer/non-
+parametric norms, SwiGLU and GELU MLPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = dict[str, Any]
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else math.prod(
+        shape[a] for a in in_axis
+    )
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32).astype(
+        dtype
+    ) * std
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype) * 0.02
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(x, scale=None, eps: float = 1e-6):
+    """f32 only for the reduction — the normalized activation stays in the
+    source dtype.  (Materializing x.astype(f32) lets XLA hoist the convert
+    out of the backward while-loop and store the whole remat stack in f32;
+    measured +2.6 GiB/device on mixtral train_4k.  EXPERIMENTS.md §Perf.)"""
+    dt = x.dtype
+    msq = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    ) / x.shape[-1]
+    r = lax.rsqrt(msq + eps)[..., None].astype(dt)
+    y = x * r
+    if scale is not None:
+        y = y * (1.0 + scale).astype(dt)  # zero-init gamma
+    return y
+
+
+def layer_norm(x, scale=None, bias=None, eps: float = 1e-5):
+    """Parametric or non-parametric (OLMo-style) LayerNorm; f32 reductions
+    only (see rms_norm)."""
+    dt = x.dtype
+    d = x.shape[-1]
+    mu = jnp.einsum("...d->...", x, preferred_element_type=jnp.float32) / d
+    msq = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    ) / d
+    var = jnp.maximum(msq - jnp.square(mu), 0.0)
+    r = lax.rsqrt(var + eps)
+    y = (x - mu[..., None].astype(dt)) * r[..., None].astype(dt)
+    if scale is not None:
+        y = y * scale.astype(dt)
+    if bias is not None:
+        y = y + bias.astype(dt)
+    return y
+
+
+def make_norm(kind: str, d: int):
+    """Returns (init_fn, apply_fn) for a norm kind."""
+    if kind == "rms":
+        return (
+            lambda key: {"scale": jnp.zeros((d,), jnp.float32)},
+            lambda p, x: rms_norm(x, p["scale"]),
+        )
+    if kind == "ln":
+        return (
+            lambda key: {
+                "scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32),
+            },
+            lambda p, x: layer_norm(x, p["scale"], p["bias"]),
+        )
+    if kind == "ln_nonparam":  # OLMo: no learnable affine
+        return (lambda key: {}, lambda p, x: layer_norm(x, None, None))
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# RoPE family
+# --------------------------------------------------------------------------
+
+
+def rope_inv_freq(rotary_dim: int, base: float = 10000.0):
+    return 1.0 / (
+        base ** (jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim)
+    )
+
+
+def apply_rope(
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    base: float = 10000.0,
+    rotary_frac: float = 1.0,
+    mrope_sections: tuple[int, ...] | None = None,
+):
+    """Rotary embedding, half-rotation convention.
+
+    x: (B, S, H, dh).  positions: (B, S) int, or (3, B, S) for M-RoPE with
+    ``mrope_sections`` (per-frequency-band position component, Qwen2-VL).
+    ``rotary_frac < 1`` rotates only the leading fraction of dh (ChatGLM-style
+    partial/"2d" RoPE).
+    """
+    dh = x.shape[-1]
+    rot = int(dh * rotary_frac)
+    rot -= rot % 2
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    inv = rope_inv_freq(rot, base)  # (rot/2,)
+    if mrope_sections is not None:
+        assert positions.ndim == 3, "M-RoPE needs (3, B, S) positions"
+        sec = jnp.concatenate(
+            [jnp.full((s,), i, jnp.int32) for i, s in enumerate(mrope_sections)]
+        )  # (rot/2,) per-frequency position-component selector
+        pos = jnp.take(positions.astype(jnp.float32), sec, axis=0)  # (rot/2, B, S)
+        angles = jnp.moveaxis(pos, 0, -1) * inv[None, None, :]  # (B, S, rot/2)
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * inv  # (B, S, rot/2)
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)  # (B, S, 1, rot/2)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x_rot[..., : rot // 2], x_rot[..., rot // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < dh else out
+
+
+def sinusoidal_positions(seq: int, d: int, dtype=jnp.float32):
+    """Whisper-style fixed sinusoidal encodings (S, d)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    angle = pos / (10000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: int | None = None  # sliding-window size (None = full)
+    qk_norm: bool = False
+    rope: str | None = "std"  # None | "std" | "partial" | "mrope"
+    rope_base: float = 10000.0
+    rotary_frac: float = 1.0
+    mrope_sections: tuple[int, ...] | None = None
+    attn_block: int = 1024  # KV-chunk size for online-softmax scan
+
+
+def attn_init(key, d_model: int, spec: AttnSpec) -> Params:
+    ks = jax.random.split(key, 5)
+    h, kv, dh = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    p = {
+        "wq": dense_init(ks[0], (d_model, h * dh)),
+        "wk": dense_init(ks[1], (d_model, kv * dh)),
+        "wv": dense_init(ks[2], (d_model, kv * dh)),
+        "wo": dense_init(ks[3], (h * dh, d_model)),
+    }
+    if spec.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), jnp.float32)
+        p["k_norm"] = jnp.zeros((dh,), jnp.float32)
+    return p
+
+
+def _online_softmax_attn(
+    q: jax.Array,  # (B, Sq, KV, G, dh)
+    k: jax.Array,  # (B, Skv, KV, dh)
+    v: jax.Array,  # (B, Skv, KV, dh)
+    *,
+    q_positions: jax.Array,  # (B, Sq) global positions of queries
+    causal: bool,
+    window: int | None,
+    kv_valid_len: jax.Array | None,  # scalar #valid kv entries (cache fill)
+    block: int,
+):
+    """Flash-style chunked attention: scan over KV blocks, O(Sq*block) memory.
+
+    Decode fast path (Sq == 1): single-shot softmax over the full KV — the
+    scan's per-step dynamic-slice on a sequence-sharded cache forces GSPMD to
+    all-gather it (measured 60 GB/token on qwen3 decode_32k); the one-shot
+    einsum keeps S as a partitionable dim (flash-decoding under GSPMD) and
+    the scores tensor is tiny at Sq=1.
+    """
+    b, sq, kvh, g, dh = q.shape
+    skv = k.shape[1]
+    if sq == 1:
+        return _single_shot_attn(
+            q, k, v, q_positions=q_positions, causal=causal, window=window,
+            kv_valid_len=kv_valid_len,
+        )
+    block = min(block, skv)
+    pad = (-skv) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = (skv + pad) // block
+    k = k.reshape(b, nblk, block, kvh, dh).transpose(1, 0, 2, 3, 4)
+    v = v.reshape(b, nblk, block, kvh, dh).transpose(1, 0, 2, 3, 4)
+
+    scale = 1.0 / math.sqrt(dh)
+    qf = (q * scale).astype(jnp.float32)
+    neg = jnp.float32(-1e30)
+
+    def step(carry, xs):
+        m, l, acc, blk_i = carry
+        kb, vb = xs  # (B, block, KV, dh)
+        s = jnp.einsum(
+            "bqkgd,bckd->bkgqc", qf, kb.astype(jnp.float32)
+        )  # (B, KV, G, Sq, block)
+        # cache slots hold absolute positions starting at 0; queries carry
+        # absolute positions too, so the mask compares slot index vs q pos.
+        kv_gpos = blk_i * block + jnp.arange(block)
+        mask = jnp.ones((b, sq, block), bool)
+        if causal:
+            mask &= kv_gpos[None, None, :] <= q_positions[:, :, None]
+        if window is not None:
+            mask &= kv_gpos[None, None, :] > (q_positions[:, :, None] - window)
+        if kv_valid_len is not None:
+            mask &= kv_gpos[None, None, :] < kv_valid_len
+        if pad:
+            mask &= kv_gpos[None, None, :] < skv
+        s = jnp.where(mask[:, None, None, :, :], s, neg)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqc,bckd->bkgqd", p, vb.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new, blk_i + 1), None
+
+    m0 = jnp.full((b, kvh, g, sq), neg)
+    l0 = jnp.zeros((b, kvh, g, sq))
+    a0 = jnp.zeros((b, kvh, g, sq, dh))
+    (m, l, acc, _), _ = lax.scan(step, (m0, l0, a0, 0), (k, v))
+    out = acc / jnp.maximum(l[..., None], 1e-30)  # (B, KV, G, Sq, dh)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, kvh * g, dh)
+    return out
+
+
+def _single_shot_attn(
+    q: jax.Array,  # (B, 1, KV, G, dh)
+    k: jax.Array,  # (B, Skv, KV, dh)
+    v: jax.Array,
+    *,
+    q_positions: jax.Array,
+    causal: bool,
+    window: int | None,
+    kv_valid_len,
+):
+    b, sq, kvh, g, dh = q.shape
+    skv = k.shape[1]
+    scale = 1.0 / math.sqrt(dh)
+    qf = (q * scale).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    kv_gpos = jnp.arange(skv)
+    mask = jnp.ones((b, sq, skv), bool)
+    if causal:
+        mask &= kv_gpos[None, None, :] <= q_positions[:, :, None]
+    if window is not None:
+        mask &= kv_gpos[None, None, :] > (q_positions[:, :, None] - window)
+    if kv_valid_len is not None:
+        mask &= kv_gpos[None, None, :] < kv_valid_len
+    s = jnp.where(mask[:, None, None, :, :], s, jnp.float32(-1e30))
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1)
+    pv = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    out = pv / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, kvh * g, dh)
+
+
+def attention(
+    params: Params,
+    x: jax.Array,  # (B, Sq, d)
+    spec: AttnSpec,
+    *,
+    positions: jax.Array,  # (B, Sq) or (3, B, Sq) for mrope
+    kv_cache: tuple[jax.Array, jax.Array] | None = None,  # (B, Smax, KV, dh)
+    cache_pos: jax.Array | None = None,  # scalar fill position
+    cache_mode: str = "linear",  # linear | rolling (SWA window cache)
+    kv_x: jax.Array | None = None,  # cross-attention source (B, Skv, d)
+    precomputed_kv: tuple[jax.Array, jax.Array] | None = None,
+    q_chunk: int | None = None,
+):
+    """GQA attention with optional KV cache / cross-attention.
+
+    Returns (out (B, Sq, d), new_kv_cache or None).
+    """
+    b, sq, _ = x.shape
+    h, kvh, dh = spec.n_heads, spec.n_kv_heads, spec.head_dim
+    g = h // kvh
+    compute_dtype = x.dtype
+
+    q = (x @ params["wq"].astype(compute_dtype)).reshape(b, sq, h, dh)
+    if precomputed_kv is not None:
+        k = v = None
+    else:
+        src = x if kv_x is None else kv_x
+        skv_in = src.shape[1]
+        k = (src @ params["wk"].astype(compute_dtype)).reshape(b, skv_in, kvh, dh)
+        v = (src @ params["wv"].astype(compute_dtype)).reshape(b, skv_in, kvh, dh)
+
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        if k is not None:
+            k = rms_norm(k, params["k_norm"])
+
+    qpos = positions if positions.ndim == 2 else positions[0]
+    if spec.rope is not None and kv_x is None and precomputed_kv is None:
+        q = apply_rope(
+            q,
+            positions,
+            base=spec.rope_base,
+            rotary_frac=spec.rotary_frac,
+            mrope_sections=spec.mrope_sections,
+        )
+        k = apply_rope(  # rope applied at write time; cache stores rotated K
+            k,
+            positions,
+            base=spec.rope_base,
+            rotary_frac=spec.rotary_frac,
+            mrope_sections=spec.mrope_sections,
+        )
+
+    new_cache = None
+    kv_valid = None
+    causal = spec.causal and kv_x is None and precomputed_kv is None
+    window = spec.window
+    if precomputed_kv is not None:
+        k, v = precomputed_kv
+    elif kv_cache is not None:
+        ck, cv = kv_cache  # (B, Smax, KV, dh)
+        if cache_pos is None:
+            raise ValueError("kv_cache needs cache_pos")
+        smax = ck.shape[1]
+        if cache_mode == "rolling":
+            # SWA: slot = pos % window; all valid slots are in-window past.
+            slot = cache_pos % smax
+            causal = False
+            window = None
+            kv_valid = jnp.minimum(cache_pos + sq, smax)
+        else:
+            slot = cache_pos
+            kv_valid = cache_pos + sq
+        ck = lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+        new_cache = (ck, cv)
+        k, v = ck, cv
+
+    qg = q.reshape(b, sq, kvh, g, dh)
+    # masks follow TOKEN ORDER (cache slot index), not the rope position
+    # values — they differ under M-RoPE where vision tokens share positions.
+    base = cache_pos if cache_pos is not None else 0
+    qidx = jnp.broadcast_to(
+        base + jnp.arange(sq, dtype=jnp.int32)[None, :], (b, sq)
+    )
+
+    def attend(qg_c, qpos_c):
+        return _online_softmax_attn(
+            qg_c,
+            k,
+            v,
+            q_positions=qpos_c,
+            causal=causal,
+            window=window,
+            kv_valid_len=kv_valid,
+            block=spec.attn_block,
+        )
+
+    if q_chunk is not None and sq > q_chunk and sq % q_chunk == 0:
+        nq = sq // q_chunk
+        qg_r = qg.reshape(b, nq, q_chunk, kvh, g, dh).transpose(1, 0, 2, 3, 4, 5)
+        qp_r = qidx.reshape(b, nq, q_chunk).transpose(1, 0, 2)
+        out = lax.map(lambda args: attend(*args), (qg_r, qp_r))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq, kvh * g, dh)
+    else:
+        out = attend(qg, qidx)
+    out = out.reshape(b, sq, h * dh).astype(compute_dtype)
+    return out @ params["wo"].astype(compute_dtype), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str = "swiglu") -> Params:
+    ks = jax.random.split(key, 3)
+    if kind == "swiglu":
+        return {
+            "wi": dense_init(ks[0], (d_model, d_ff)),
+            "wg": dense_init(ks[1], (d_model, d_ff)),
+            "wo": dense_init(ks[2], (d_ff, d_model)),
+        }
+    if kind == "gelu":
+        return {
+            "wi": dense_init(ks[0], (d_model, d_ff)),
+            "wo": dense_init(ks[2], (d_ff, d_model)),
+            "bi": jnp.zeros((d_ff,), jnp.float32),
+            "bo": jnp.zeros((d_model,), jnp.float32),
+        }
+    raise ValueError(kind)
+
+
+def mlp_apply(params: Params, x: jax.Array, kind: str = "swiglu") -> jax.Array:
+    dt = x.dtype
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["wg"].astype(dt)) * (x @ params["wi"].astype(dt))
+        return h @ params["wo"].astype(dt)
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ params["wi"].astype(dt) + params["bi"].astype(dt))
+        return h @ params["wo"].astype(dt) + params["bo"].astype(dt)
+    raise ValueError(kind)

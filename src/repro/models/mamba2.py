@@ -1,0 +1,265 @@
+"""Mamba-2 / SSD (state-space duality) block, chunked scan + O(1) decode.
+
+Implements the block-decomposed SSD algorithm of Dao & Gu (arXiv:2405.21060):
+within a chunk the output is a masked quadratic form (MXU-friendly), across
+chunks a small recurrent state (H, P, N) is carried with ``lax.scan`` —
+sub-quadratic in sequence length, O(1) state for decode (the ``long_500k``
+shape runs through this path).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import Params, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    d_state: int = 128  # N
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64  # P
+    n_groups: int = 1
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba_init(key, spec: MambaSpec) -> Params:
+    ks = jax.random.split(key, 6)
+    di, n, g, h = spec.d_inner, spec.d_state, spec.n_groups, spec.n_heads
+    d_in_proj = 2 * di + 2 * g * n + h  # z, x, B, C, dt
+    conv_dim = di + 2 * g * n
+    return {
+        "in_proj": dense_init(ks[0], (spec.d_model, d_in_proj)),
+        "conv_w": dense_init(ks[1], (spec.d_conv, conv_dim), in_axis=0),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)
+        ),  # A = -exp(A_log)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(
+            jnp.exp(jnp.linspace(1e-3, 1e-1, h, dtype=jnp.float32)) - 1.0
+        ),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, spec.d_model)),
+    }
+
+
+def _split_proj(zxbcdt, spec: MambaSpec):
+    di, n, g, h = spec.d_inner, spec.d_state, spec.n_groups, spec.n_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di : 2 * di]
+    b = zxbcdt[..., 2 * di : 2 * di + g * n]
+    c = zxbcdt[..., 2 * di + g * n : 2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n :]
+    return z, x, b, c, dt
+
+
+def _gated_rmsnorm(x, z, scale, eps=1e-6):
+    dt = x.dtype
+    g = x * jax.nn.silu(z)  # stays in compute dtype (see layers.rms_norm)
+    msq = jnp.einsum(
+        "...d,...d->...", g, g, preferred_element_type=jnp.float32
+    ) / g.shape[-1]
+    r = lax.rsqrt(msq + eps)[..., None].astype(dt)
+    return g * r * (1.0 + scale).astype(dt)
+
+
+def mamba_apply(
+    params: Params,
+    u: jax.Array,  # (B, S, d_model)
+    spec: MambaSpec,
+    *,
+    state: tuple[jax.Array, jax.Array] | None = None,  # (conv_state, ssm_state)
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array] | None]:
+    """Full-sequence chunked SSD. Returns (out, final_state_or_None).
+
+    ``state`` as input is only supported by :func:`mamba_decode_step`; here a
+    fresh zero state is used and the final state returned when requested.
+    """
+    dt_ = u.dtype
+    bsz, seq, _ = u.shape
+    di, n, g, h, p = (
+        spec.d_inner,
+        spec.d_state,
+        spec.n_groups,
+        spec.n_heads,
+        spec.head_dim,
+    )
+    zxbcdt = u @ params["in_proj"].astype(dt_)
+    z, x, b, c, dt = _split_proj(zxbcdt, spec)
+
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([x, b, c], axis=-1)  # (B, S, conv_dim)
+    k = spec.d_conv
+    xbc_pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(
+        xbc_pad[:, i : i + seq, :] * params["conv_w"].astype(dt_)[i][None, None, :]
+        for i in range(k)
+    ) + params["conv_b"].astype(dt_)
+    conv = jax.nn.silu(conv)
+    final_conv_state = None
+    if state is not None:  # keep the raw last k-1 inputs for decode
+        final_conv_state = xbc_pad[:, -(k - 1) :, :].transpose(0, 2, 1)  # (B,cd,k-1)
+    x, b, c = conv[..., :di], conv[..., di : di + g * n], conv[..., di + g * n :]
+
+    xh = x.reshape(bsz, seq, h, p)
+    bh = b.reshape(bsz, seq, g, n)
+    ch = c.reshape(bsz, seq, g, n)
+    # broadcast groups to heads
+    rep = h // g
+    bh = jnp.repeat(bh, rep, axis=2)  # (B,S,H,N)
+    ch = jnp.repeat(ch, rep, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    a = -jnp.exp(params["A_log"])  # (H,)
+    da = dt * a[None, None, :]  # (B,S,H) log-decay per step
+
+    y, final_ssm = _ssd_chunked(
+        xh.astype(jnp.float32),
+        dt,
+        da,
+        bh.astype(jnp.float32),
+        ch.astype(jnp.float32),
+        chunk=spec.chunk,
+    )
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, seq, di).astype(dt_)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    out = y @ params["out_proj"].astype(dt_)
+    if state is not None:
+        return out, (final_conv_state, final_ssm.astype(dt_))
+    return out, None
+
+
+def _ssd_chunked(x, dt, da, b, c, *, chunk: int):
+    """Block-decomposed SSD.
+
+    x (B,S,H,P), dt/da (B,S,H), b/c (B,S,H,N) -> y (B,S,H,P), final_state
+    (B,H,P,N).  ``da`` is the per-step log decay; the state recurrence is
+    ``h_t = exp(da_t) h_{t-1} + dt_t * x_t b_t^T``.
+    """
+    bsz, seq, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, seq)
+    pad = (-seq) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (seq + pad) // q
+
+    def rs(t):  # (B, S, ...) -> (nc, B, q, ...)
+        return t.reshape(bsz, nc, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, dac, bc, cc = rs(x), rs(dt), rs(da), rs(b), rs(c)
+    cum = jnp.cumsum(dac, axis=2)  # (nc,B,q,H) within-chunk cumulative decay
+
+    def per_chunk(args):
+        xq, dtq, daq, bq, cq, cumq = args
+        # L[i,j] = exp(cum_i - cum_j) for i >= j  (decay from j+1..i)
+        li = cumq[:, :, None, :] - cumq[:, None, :, :]  # (B,q,q,H)
+        iq = jnp.arange(q)
+        causal = iq[:, None] >= iq[None, :]
+        l = jnp.where(causal[None, :, :, None], jnp.exp(li), 0.0)
+        s = jnp.einsum("bihn,bjhn->bijh", cq, bq)  # C_i · B_j
+        m = s * l * dtq[:, None, :, :]  # (B,i,j,H)
+        y_diag = jnp.einsum("bijh,bjhp->bihp", m, xq)
+        # chunk input state contribution: decay from chunk start to i
+        # state_in is added later (needs the scan carry)
+        # chunk-final state: sum_j exp(cum_q - cum_j) dt_j x_j b_j^T
+        w = jnp.exp(cumq[:, -1:, :] - cumq) * dtq  # (B,q,H)
+        st = jnp.einsum("bjh,bjhp,bjhn->bhpn", w, xq, bq)
+        return y_diag, st, l
+
+    y_diag, st_chunks, _ = jax.vmap(per_chunk)((xc, dtc, dac, bc, cc, cum))
+
+    # inter-chunk recurrence over chunk-final states
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=2))  # (nc,B,H) total chunk decay
+
+    def scan_fn(hprev, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        hnew = hprev * dec[:, :, None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((bsz, h, p, n))
+    hlast, hins = lax.scan(scan_fn, h0, (st_chunks, chunk_decay))
+    # state contribution inside each chunk: y_i += C_i exp(cum_i) h_in
+    y_state = jnp.einsum(
+        "cbihn,cbhpn,cbih->cbihp",
+        cc,
+        hins,
+        jnp.exp(cum),
+    )
+    y = (y_diag + y_state).swapaxes(0, 1).reshape(bsz, seq + pad, h, p)
+    return y[:, :seq], hlast
+
+
+def mamba_decode_step(
+    params: Params,
+    u: jax.Array,  # (B, 1, d_model)
+    spec: MambaSpec,
+    state: tuple[jax.Array, jax.Array],  # conv (B,conv_dim,k-1), ssm (B,H,P,N)
+) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """Single-token recurrent step (O(1) in sequence length)."""
+    dt_ = u.dtype
+    bsz = u.shape[0]
+    di, n, g, h, p = (
+        spec.d_inner,
+        spec.d_state,
+        spec.n_groups,
+        spec.n_heads,
+        spec.head_dim,
+    )
+    conv_state, ssm_state = state
+    zxbcdt = (u[:, 0, :] @ params["in_proj"].astype(dt_))  # (B, d_in_proj)
+    z, x, b, c, dt = _split_proj(zxbcdt, spec)
+    xbc = jnp.concatenate([x, b, c], axis=-1)  # (B, conv_dim)
+    k = spec.d_conv
+    # conv over [state, new] window
+    window = jnp.concatenate([conv_state, xbc[:, :, None]], axis=2)  # (B,cd,k)
+    conv = (
+        jnp.einsum("bck,kc->bc", window, params["conv_w"].astype(dt_))
+        + params["conv_b"].astype(dt_)
+    )
+    conv = jax.nn.silu(conv)
+    new_conv_state = window[:, :, 1:]
+    x, b, c = conv[..., :di], conv[..., di : di + g * n], conv[..., di + g * n :]
+    xh = x.reshape(bsz, h, p).astype(jnp.float32)
+    rep = h // g
+    bh = jnp.repeat(b.reshape(bsz, g, n), rep, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(c.reshape(bsz, g, n), rep, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, :])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    dec = jnp.exp(dt * a[None, :])  # (B,H)
+    ssm = ssm_state.astype(jnp.float32)
+    ssm = ssm * dec[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xh, bh
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", ssm, ch) + params["D"][None, :, None] * xh
+    y = y.reshape(bsz, di).astype(dt_)
+    y = _gated_rmsnorm(y, z, params["norm_scale"])
+    out = (y @ params["out_proj"].astype(dt_))[:, None, :]
+    return out, (new_conv_state.astype(dt_), ssm.astype(dt_))
+
+
+def mamba_init_state(spec: MambaSpec, batch: int, dtype=jnp.float32):
+    conv_dim = spec.d_inner + 2 * spec.n_groups * spec.d_state
+    return (
+        jnp.zeros((batch, conv_dim, spec.d_conv - 1), dtype),
+        jnp.zeros((batch, spec.n_heads, spec.head_dim, spec.d_state), dtype),
+    )

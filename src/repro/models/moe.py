@@ -1,0 +1,147 @@
+"""Capacity-based top-k routed MoE (GShard/Mixtral-style), GSPMD-friendly.
+
+Dispatch/combine are expressed as dense one-hot einsums so XLA's SPMD
+partitioner can shard experts and d_ff over the mesh without data-dependent
+shapes.  Tokens beyond an expert's capacity are dropped (weights renormalized)
+— the standard TPU formulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_ff: int
+    capacity_factor: float = 1.25
+    group_size: int = 2048  # tokens per routing group (bounds dispatch to
+    #                         O(gs * E * C) instead of O(S^2) at long seq)
+    virtual_factor: int = 1  # split each expert's ff into v slices -> E*v
+    #                          "virtual experts" (exact for gated MLPs: the
+    #                          elementwise gate commutes with the ff split and
+    #                          slice outputs sum through wo).  Lets expert
+    #                          parallelism divide mesh axes E*v % axis == 0.
+    tokens_per_call: int = 1 << 31  # chunk the token stream through the expert
+    #                                GEMMs (lax.map) so EP's live xe/ye slots
+    #                                stay bounded at long-sequence prefill.
+    #                                DISABLED by default: under GSPMD the map
+    #                                re-replicates tokens (measured 2.5x FLOPs
+    #                                blow-up; EXPERIMENTS.md §Perf, refuted)
+
+    @property
+    def n_virtual(self) -> int:
+        return self.n_experts * self.virtual_factor
+
+    @property
+    def ff_slice(self) -> int:
+        assert self.d_ff % self.virtual_factor == 0
+        return self.d_ff // self.virtual_factor
+
+
+def moe_init(key, d_model: int, spec: MoESpec) -> Params:
+    ks = jax.random.split(key, 4)
+    ev, fv = spec.n_virtual, spec.ff_slice
+    return {
+        "router": dense_init(ks[0], (d_model, spec.n_experts)),
+        "wi": dense_init(ks[1], (ev, d_model, fv), in_axis=1),
+        "wg": dense_init(ks[2], (ev, d_model, fv), in_axis=1),
+        "wo": dense_init(ks[3], (ev, fv, d_model), in_axis=1),
+    }
+
+
+def moe_apply(
+    params: Params, x: jax.Array, spec: MoESpec, constrain=None
+) -> tuple[jax.Array, jax.Array]:
+    """x (..., T, d) -> (out (..., T, d), aux_loss scalar).
+
+    Tokens are routed in fixed-size groups (GShard convention): the flattened
+    token stream is reshaped to (n_groups, group_size) so the dispatch/combine
+    one-hots stay O(gs * E * C) regardless of sequence length.
+    """
+    dt = x.dtype
+    lead = x.shape[:-2]
+    t_orig, d = x.shape[-2], x.shape[-1]
+    t = t_orig
+    xf = x.reshape(-1, t, d)  # (G, T, d) groups = flattened leading dims
+    if t > spec.group_size and t % spec.group_size == 0:
+        xf = xf.reshape(-1, spec.group_size, d)
+        t = spec.group_size
+    total = xf.shape[0] * t
+    if total > spec.tokens_per_call and total % spec.tokens_per_call == 0:
+        n_chunks = total // spec.tokens_per_call
+        if xf.shape[0] % n_chunks == 0:
+            xc = xf.reshape(n_chunks, xf.shape[0] // n_chunks, t, d)
+            outs, auxs = jax.lax.map(
+                lambda xi: _moe_groups(params, xi, spec, constrain), xc
+            )
+            return (
+                outs.reshape(*lead, t_orig, d),
+                auxs.mean().astype(jnp.float32),
+            )
+    out, aux = _moe_groups(params, xf, spec, constrain)
+    return out.reshape(*lead, t_orig, d), aux
+
+
+def _moe_groups(params, xf, spec, constrain):
+    """Route + expert-compute one batch of token groups: (G, gs, d)."""
+    dt = xf.dtype
+    t, d = xf.shape[-2], xf.shape[-1]
+    g = xf.shape[0]
+    e, k = spec.n_experts, spec.top_k
+    cap = int(math.ceil(t * k / e * spec.capacity_factor))
+    cap = max(cap, 1)
+
+    logits = (xf @ params["router"].astype(dt)).astype(jnp.float32)  # (G,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (G,T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )  # renormalize over the chosen k (Mixtral convention)
+
+    # load-balancing aux loss (Switch): e * sum_e f_e * p_e
+    me = probs.mean(axis=1)  # (G,E)
+    ce = jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32).mean(axis=1)
+    aux = (me * ce).sum(axis=-1).mean() * e
+
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (G,T,k,E)
+    # position of each (token, slot) within its expert's buffer (f32 cumsum
+    # stays exact; the big (…,E,C) one-hots below are built in the compute
+    # dtype — 0/1 values are exact in bf16 and the tensors halve in size)
+    pos = jnp.cumsum(onehot.reshape(g, t * k, e), axis=1).reshape(g, t, k, e)
+    pos = pos * onehot - 1.0  # -1 where not routed
+    keep = (pos >= 0) & (pos < cap)
+    pos = jnp.clip(pos, 0, cap - 1)
+    cap_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=dt)
+    routed = (onehot * keep).astype(dt)
+    dispatch = routed[..., None] * cap_oh  # (G,T,k,E,C)
+    dispatch = dispatch.sum(axis=2)  # (G,T,E,C)
+    combine = (gate_vals.astype(dt)[..., None] * routed)[..., None] * cap_oh
+    combine = combine.sum(axis=2)  # (G,T,E,C)
+
+    if spec.virtual_factor > 1:
+        # duplicate routing across the v ff-slices of each expert
+        dispatch = jnp.repeat(dispatch, spec.virtual_factor, axis=2)
+        combine = jnp.repeat(combine, spec.virtual_factor, axis=2)
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch.astype(dt), xf)  # (G,Ev,C,d)
+    if constrain is not None:
+        # force activation-side resharding: the expert GEMMs contract the
+        # (data-sharded) d / ff weight dims locally and psum small activation
+        # partials, instead of all-gathering the full expert weight stack.
+        xe = constrain("xe", xe)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, params["wg"].astype(dt)))
+    h = h * jnp.einsum("gecd,edf->gecf", xe, params["wi"].astype(dt))
+    if constrain is not None:
+        h = constrain("h", h)
+    ye = jnp.einsum("gecf,efd->gecd", h, params["wo"].astype(dt))  # (G,E,C,d)
+    if constrain is not None:
+        ye = constrain("ye", ye)
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(dt), ye)
+    return out, aux.astype(jnp.float32)

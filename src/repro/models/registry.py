@@ -1,0 +1,118 @@
+"""Architecture registry: ``--arch <id>`` -> config + step functions + specs."""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeCfg
+from repro.models import transformer as T
+
+ARCH_MODULES: dict[str, str] = {
+    "olmo-1b": "repro.configs.olmo_1b",
+    "qwen3-0.6b": "repro.configs.qwen3_0_6b",
+    "qwen3-1.7b": "repro.configs.qwen3_1_7b",
+    "chatglm3-6b": "repro.configs.chatglm3_6b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "whisper-small": "repro.configs.whisper_small",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "zamba2-1.2b": "repro.configs.zamba2_1_2b",
+}
+
+ARCH_IDS = tuple(ARCH_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ArchConfig:
+    mod = importlib.import_module(ARCH_MODULES[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+@dataclasses.dataclass
+class Bundle:
+    cfg: ArchConfig
+
+    # -- params -------------------------------------------------------------
+    def init(self, rng: jax.Array):
+        return T.init_params(self.cfg, rng)
+
+    def param_struct(self, dtype=None):
+        s = jax.eval_shape(self.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        if dtype is not None:
+            s = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, dtype), s)
+        return s
+
+    # -- steps ----------------------------------------------------------------
+    def train_step(self, ctx, optimizer, shape: ShapeCfg):
+        return T.make_train_step(self.cfg, ctx, optimizer, shape)
+
+    def prefill_step(self, ctx, shape: ShapeCfg):
+        return T.make_prefill_step(self.cfg, ctx, shape)
+
+    def serve_step(self, ctx):
+        return T.make_serve_step(self.cfg, ctx)
+
+    # -- shape specs ----------------------------------------------------------
+    def batch_specs(self, shape: ShapeCfg, act_dtype=jnp.bfloat16) -> dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a shape."""
+        cfg = self.cfg
+        b, s = shape.batch, shape.seq
+        i32 = jnp.int32
+
+        def sd(shp, dt):
+            return jax.ShapeDtypeStruct(shp, dt)
+
+        if shape.kind in ("train", "prefill"):
+            out: dict[str, Any] = {}
+            if cfg.input_kind == "embeds":
+                out["embeds"] = sd((b, s, cfg.d_model), act_dtype)
+                out["positions"] = sd((3, b, s), i32)
+            elif cfg.input_kind == "frames_tokens":
+                out["frames"] = sd((b, s, cfg.d_model), act_dtype)
+                out["tokens"] = sd((b, s), i32)
+            else:
+                out["tokens"] = sd((b, s), i32)
+            if shape.kind == "train":
+                out["labels"] = sd((b, s), i32)
+            return out
+        # decode
+        out = {}
+        if cfg.input_kind == "embeds":
+            out["embeds"] = sd((b, 1, cfg.d_model), act_dtype)
+            out["positions"] = sd((3, b, 1), i32)
+        else:
+            out["tokens"] = sd((b, 1), i32)
+        return out
+
+    def cache_struct(self, shape: ShapeCfg, dtype=jnp.bfloat16):
+        return jax.eval_shape(
+            lambda: T.init_cache(self.cfg, shape, dtype=dtype)
+        )
+
+    def make_batch(self, shape: ShapeCfg, rng: jax.Array, act_dtype=jnp.bfloat16):
+        """Concrete random batch (smoke tests / examples)."""
+        specs = self.batch_specs(shape, act_dtype)
+        out = {}
+        for k, v in specs.items():
+            rng, sub = jax.random.split(rng)
+            if v.dtype == jnp.int32:
+                hi = self.cfg.vocab if k in ("tokens", "labels") else shape.seq
+                out[k] = jax.random.randint(sub, v.shape, 0, max(hi, 2), jnp.int32)
+            else:
+                out[k] = jax.random.normal(sub, v.shape, jnp.float32).astype(v.dtype)
+        return out
+
+
+def build(arch: str, smoke: bool = False) -> Bundle:
+    cfg = get_config(arch, smoke)
+    # whisper needs the frames+tokens input kind
+    if cfg.family == "encdec" and cfg.input_kind == "tokens":
+        cfg = dataclasses.replace(cfg, input_kind="frames_tokens")
+    return Bundle(cfg)
+
+
+__all__ = ["ARCH_IDS", "ARCH_MODULES", "Bundle", "build", "get_config", "SHAPES"]

@@ -1,0 +1,47 @@
+"""Latency percentile tracking for SLA-driven serving (paper §IV-A).
+
+The paper's deployment metric is the P99 batch latency under an SLA bound;
+this tracker maintains a sliding window of per-batch latencies and exposes
+the percentile/throughput trade-off the evaluation plots."""
+from __future__ import annotations
+
+import collections
+
+import numpy as np
+
+
+class LatencyTracker:
+    def __init__(self, window: int = 2048):
+        self.samples: collections.deque[float] = collections.deque(maxlen=window)
+        self.queries = 0
+        self.t_total = 0.0
+
+    def record(self, seconds: float, queries: int = 1) -> None:
+        self.samples.append(seconds)
+        self.queries += queries
+        self.t_total += seconds
+
+    def percentile(self, q: float) -> float:
+        if not self.samples:
+            return float("nan")
+        return float(np.percentile(np.array(self.samples), q))
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99)
+
+    @property
+    def throughput(self) -> float:
+        return self.queries / self.t_total if self.t_total else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "p50_us": self.p50 * 1e6,
+            "p99_us": self.p99 * 1e6,
+            "tps": self.throughput,
+            "n": len(self.samples),
+        }

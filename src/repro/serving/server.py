@@ -1,0 +1,105 @@
+"""Batched serving with SLA tracking and hedged straggler mitigation.
+
+A deployment-shaped serving layer exercised at CPU scale:
+
+* ``Batcher`` — queues single queries and releases batches on (max_batch |
+  max_wait), the knob that trades P99 latency against throughput (paper
+  Fig. 4's x-axis is exactly this batch size);
+* ``Server`` — runs a jitted step over released batches, records latencies;
+* hedged requests — if a batch's execution exceeds ``hedge_factor`` x the
+  median, a backup execution is launched (simulated duplicate here) and the
+  faster result wins: classic tail-taming for stragglers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.serving.latency import LatencyTracker
+
+
+@dataclasses.dataclass
+class Query:
+    payload: Any
+    t_enqueue: float
+
+
+class Batcher:
+    def __init__(self, max_batch: int, max_wait_s: float = 0.005):
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.queue: list[Query] = []
+
+    def submit(self, payload: Any, now: float | None = None) -> None:
+        self.queue.append(Query(payload, now if now is not None else time.perf_counter()))
+
+    def maybe_release(self, now: float | None = None) -> list[Query] | None:
+        now = now if now is not None else time.perf_counter()
+        if not self.queue:
+            return None
+        if (
+            len(self.queue) >= self.max_batch
+            or now - self.queue[0].t_enqueue >= self.max_wait_s
+        ):
+            batch, self.queue = self.queue[: self.max_batch], self.queue[self.max_batch :]
+            return batch
+        return None
+
+
+class Server:
+    def __init__(
+        self,
+        step_fn: Callable[[list[Any]], Any],
+        *,
+        max_batch: int = 256,
+        max_wait_s: float = 0.005,
+        hedge_factor: float = 3.0,
+        n_replicas: int = 2,
+    ):
+        self.step_fn = step_fn
+        self.batcher = Batcher(max_batch, max_wait_s)
+        self.tracker = LatencyTracker()
+        self.hedge_factor = hedge_factor
+        self.n_replicas = max(n_replicas, 1)
+        self.hedges = 0
+        self._exec_times: list[float] = []
+
+    def submit(self, payload: Any) -> None:
+        self.batcher.submit(payload)
+
+    def pump(self) -> Any | None:
+        """Release + execute one batch if ready. Returns results or None."""
+        batch = self.batcher.maybe_release()
+        if batch is None:
+            return None
+        t0 = time.perf_counter()
+        out = self.step_fn([q.payload for q in batch])
+        dt = time.perf_counter() - t0
+        # hedging: a straggling execution is retried on a backup replica; we
+        # model the win as the median execution time (the backup is healthy).
+        if (
+            len(self._exec_times) >= 8
+            and dt > self.hedge_factor * float(np.median(self._exec_times))
+            and self.n_replicas > 1
+        ):
+            self.hedges += 1
+            dt = float(np.median(self._exec_times))
+        self._exec_times.append(dt)
+        now = time.perf_counter()
+        for q in batch:
+            self.tracker.record(now - q.t_enqueue, queries=1)
+        return out
+
+    def drain(self, max_iters: int = 10_000) -> None:
+        it = 0
+        while self.batcher.queue and it < max_iters:
+            self.pump()
+            it += 1
+
+    def stats(self) -> dict:
+        s = self.tracker.summary()
+        s["hedged_batches"] = self.hedges
+        return s

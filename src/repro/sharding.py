@@ -1,0 +1,185 @@
+"""Logical sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Scheme (MaxText-style TP + ZeRO-3, adapted per DESIGN.md §5):
+
+* ``model`` axis: tensor parallelism — heads/ff/expert-ff/vocab dims; the
+  embedding table is vocab(row)-sharded (the paper's chunked table placement)
+  and consumed via shard_map vocab-parallel lookup.
+* ``fsdp`` axes (``data``, plus ``pod`` when multi-pod): parameters,
+  gradients and optimizer moments are additionally sharded over the batch
+  axes on a non-TP dimension; XLA GSPMD inserts the per-layer all-gathers
+  inside the layer scan (ZeRO-3).
+* batch dims shard over (pod, data); KV caches and SSM states shard their
+  sequence/head dims over ``model`` (sequence-parallel decode = the
+  flash-decoding pattern under GSPMD).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCfg
+
+
+def axes_for(multi_pod: bool):
+    return {
+        "model": "model",
+        "fsdp": ("pod", "data") if multi_pod else ("data",),
+        "dp": ("pod", "data") if multi_pod else ("data",),
+    }
+
+
+def _path_names(path) -> tuple[str, ...]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            names.append(str(p.idx))
+        else:
+            names.append(str(p))
+    return tuple(names)
+
+
+def param_spec(path_names: tuple[str, ...], ndim: int, ax) -> P:
+    """Sharding rule for one parameter leaf, by name + rank.
+
+    Stacked layer params carry a leading L dim (unsharded); the rules below
+    are written for the trailing dims and padded with None on the left.
+    """
+    name = path_names[-1]
+    in_moe = "moe" in path_names
+    model, fsdp = ax["model"], ax["fsdp"]
+
+    def pad(spec: tuple) -> P:
+        return P(*([None] * (ndim - len(spec)) + list(spec)))
+
+    if name == "embed":
+        return P(model, None)  # paper: row-chunked table placement
+    if name == "lm_head":
+        return P(fsdp, model)
+    if name == "pos_emb":
+        return P(model, None)
+    if name in ("wq", "wk", "wv"):
+        return pad((fsdp, model))
+    if name == "wo" and in_moe:
+        return pad(("data", model, None))  # (E, ff, d): EP + TP
+    if name == "wo" and "attn" in path_names or name == "wo" and "xattn" in path_names:
+        return pad((model, fsdp))
+    if name == "wo":  # mlp down-projection (ff, d)
+        return pad((model, fsdp))
+    if name in ("wi", "wg") and in_moe:
+        return pad(("data", None, model))  # (E, d, ff): EP + TP
+    if name in ("wi", "wg"):
+        return pad((fsdp, model))
+    if name == "router":
+        return pad((fsdp, None))
+    if name == "in_proj":
+        return pad((fsdp, model))
+    if name == "out_proj":
+        return pad((model, fsdp))
+    if name == "proj_out":  # zamba2 shared-block output projection (2d, d)
+        return pad((model, fsdp))
+    if name == "conv_w":
+        return pad((None, model))
+    if name == "conv_b":
+        return pad((model,))
+    if name == "norm_scale":
+        return pad((model,))
+    if name in ("A_log", "D", "dt_bias"):
+        return pad(())
+    if name in ("w",):  # dlrm mlp
+        return pad((fsdp, model)) if ndim >= 2 else pad(())
+    # norms (scale/bias/q_norm/k_norm), biases, scalars: replicated
+    return P(*([None] * ndim))
+
+
+def param_pspecs(params_struct: Any, multi_pod: bool) -> Any:
+    ax = axes_for(multi_pod)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_path_names(path), len(leaf.shape), ax),
+        params_struct,
+    )
+
+
+def opt_pspecs(opt_struct: Any, params_specs: Any) -> Any:
+    """Optimizer state mirrors parameter sharding (moments like params)."""
+
+    def build(leaf_path, leaf):
+        names = _path_names(leaf_path)
+        if names and names[0] in ("m", "v", "mu", "acc"):
+            # index into params_specs with the remaining path
+            sub = params_specs
+            for n in names[1:]:
+                sub = sub[int(n)] if isinstance(sub, (list, tuple)) else sub[n]
+            return sub
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map_with_path(build, opt_struct)
+
+
+def dp_size(mesh) -> int:
+    return int(
+        jnp.prod(jnp.array([mesh.shape[a] for a in mesh.axis_names if a != "model"]))
+    )
+
+
+def batch_pspecs(cfg: ArchConfig, shape: ShapeCfg, multi_pod: bool, n_dp: int = 16) -> dict:
+    ax = axes_for(multi_pod)
+    dp = ax["dp"]
+    # batch is replicated when it cannot divide the dp axes (long_500k b=1)
+    shard_batch = shape.batch % n_dp == 0
+    bspec = dp if shard_batch else None
+    out = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.input_kind == "embeds":
+            out["embeds"] = P(bspec, None, None)
+            out["positions"] = P(None, bspec, None)
+        elif cfg.input_kind == "frames_tokens":
+            out["frames"] = P(bspec, None, None)
+            out["tokens"] = P(bspec, None)
+        else:
+            out["tokens"] = P(bspec, None)
+        if shape.kind == "train":
+            out["labels"] = P(bspec, None)
+        return out
+    if cfg.input_kind == "embeds":
+        out["embeds"] = P(bspec, None, None)
+        out["positions"] = P(None, bspec, None)
+    else:
+        out["tokens"] = P(bspec, None)
+    return out
+
+
+def cache_pspecs(cfg: ArchConfig, shape: ShapeCfg, multi_pod: bool, n_dp: int = 16) -> dict:
+    ax = axes_for(multi_pod)
+    dp, model = ax["dp"], ax["model"]
+    shard_batch = shape.batch % n_dp == 0
+    b = dp if shard_batch else None
+    out: dict[str, P] = {"pos": P()}
+    if cfg.family in ("dense", "moe", "vlm"):
+        out["k"] = P(None, b, model, None, None)  # seq-sharded cache
+        out["v"] = P(None, b, model, None, None)
+    elif cfg.family == "ssm":
+        out["conv"] = P(None, b, model, None)
+        out["ssm"] = P(None, b, model, None, None)  # heads over model
+    elif cfg.family == "hybrid":
+        out["conv"] = P(None, b, model, None)
+        out["ssm"] = P(None, b, model, None, None)
+        out["shared_k"] = P(None, b, model, None, None)
+        out["shared_v"] = P(None, b, model, None, None)
+    elif cfg.family == "encdec":
+        out["k"] = P(None, b, model, None, None)
+        out["v"] = P(None, b, model, None, None)
+        out["ck"] = P(None, b, model, None, None)
+        out["cv"] = P(None, b, model, None, None)
+    return out
+
+
+def with_sharding(mesh, tree, specs):
+    return jax.tree.map(
+        lambda leaf, spec: NamedSharding(mesh, spec), tree, specs
+    )

@@ -1,0 +1,55 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-leaf-scale quantization of gradients before the data-parallel
+reduction, with residual error feedback (Seide et al. / Karimireddy et al.):
+the quantization error is added back to the next step's gradient, preserving
+convergence.  On the wire this cuts DP gradient traffic 4x vs fp32 / 2x vs
+bf16; here the quantize/dequantize pair runs inside the jitted train step and
+the saved bytes show up in the dry-run collective analysis.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def quantize(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Any, error: Any) -> tuple[Any, Any]:
+    """Returns (decompressed grads as would arrive post-reduction, new error).
+
+    The compressed representation is what crosses the DP wire; we return the
+    dequantized value so the optimizer sees exactly what a real deployment
+    would apply, plus the residual for error feedback.
+    """
+
+    def one(g, e):
+        corrected = g + e
+        q, s = quantize(corrected)
+        deq = dequantize(q, s)
+        return deq, corrected - deq
+
+    flat = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, new_err
+
+
+def wire_bytes(params: Any) -> tuple[int, int]:
+    """(fp32 bytes, int8 bytes) a DP gradient reduction would move."""
+    n = sum(x.size for x in jax.tree.leaves(params))
+    return 4 * n, n + 4 * len(jax.tree.leaves(params))

@@ -1,0 +1,121 @@
+"""Pure-pytree optimizers (no optax): SGD, Adagrad (DLRM standard), AdamW.
+
+State layouts mirror the parameter pytree so the same sharding specs apply
+(ZeRO-style: moments sharded exactly like their parameters).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+    name: str = "opt"
+
+
+def sgd(lr: float = 1e-2, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum:
+            return {
+                "mu": jax.tree.map(jnp.zeros_like, params),
+                "step": jnp.zeros((), jnp.int32),
+            }
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            new = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+            return new, {"mu": mu, "step": state["step"] + 1}
+        new = jax.tree.map(lambda p, g: p - lr * g, params, grads)
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+def adagrad(lr: float = 1e-2, eps: float = 1e-10) -> Optimizer:
+    """The classic DLRM embedding optimizer (per-coordinate adaptive)."""
+
+    def init(params):
+        return {
+            "acc": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        acc = jax.tree.map(lambda a, g: a + g * g, state["acc"], grads)
+        new = jax.tree.map(
+            lambda p, g, a: p - lr * g / (jnp.sqrt(a) + eps), params, grads, acc
+        )
+        return new, {"acc": acc, "step": state["step"] + 1}
+
+    return Optimizer(init, update, "adagrad")
+
+
+def adamw(
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: float | None = 1.0,
+    moments_dtype=None,
+) -> Optimizer:
+    """AdamW; ``moments_dtype=bf16`` halves optimizer-state HBM (moment math
+    still runs in f32; the paper-scale MoE train cells need this to fit a
+    single v5e pod — see EXPERIMENTS.md §Perf)."""
+
+    def init(params):
+        def z(p):
+            return jnp.zeros(p.shape, moments_dtype or p.dtype)
+
+        return {
+            "m": jax.tree.map(z, params),
+            "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        if grad_clip is not None:
+            gnorm = jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads)
+                )
+            )
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        def mom(m_, g):
+            out = b1 * m_.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)
+            return out.astype(m_.dtype)
+
+        def vel(v_, g):
+            g32 = g.astype(jnp.float32)
+            out = b2 * v_.astype(jnp.float32) + (1 - b2) * g32 * g32
+            return out.astype(v_.dtype)
+
+        m = jax.tree.map(mom, state["m"], grads)
+        v = jax.tree.map(vel, state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_.astype(jnp.float32) / bc1) / (
+                jnp.sqrt(v_.astype(jnp.float32) / bc2) + eps
+            )
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update, "adamw")

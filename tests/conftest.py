@@ -1,0 +1,11 @@
+import os
+import sys
+from pathlib import Path
+
+# src layout without install
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device.  Multi-device tests spawn subprocesses that
+# set the flag themselves (see tests/test_multidevice.py).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

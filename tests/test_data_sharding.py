@@ -1,0 +1,111 @@
+"""Synthetic data generators + sharding-rule unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as sh
+from repro.configs.base import SHAPES
+from repro.core.tables import TableSpec
+from repro.data.synthetic import ctr_batch, query_batch, sample_indices
+from repro.data.workloads import WORKLOADS, small_workload
+from repro.models import registry
+
+
+def test_distributions_shapes_and_ranges():
+    rng = np.random.default_rng(0)
+    t = TableSpec("t", rows=1000, dim=16, seq=4)
+    for dist in ("uniform", "fixed", "real"):
+        idx = sample_indices(rng, t, 128, dist)
+        assert idx.shape == (128, 4)
+        assert idx.min() >= 0 and idx.max() < 1000
+
+
+def test_fixed_is_constant():
+    rng = np.random.default_rng(0)
+    t = TableSpec("t", rows=50, dim=16, seq=2)
+    idx = sample_indices(rng, t, 64, "fixed")
+    assert len(np.unique(idx)) == 1
+
+
+def test_zipf_skew():
+    """Realistic distribution is much more concentrated than uniform."""
+    rng = np.random.default_rng(0)
+    t = TableSpec("t", rows=100_000, dim=16, seq=1, zipf_alpha=1.1)
+    real = sample_indices(rng, t, 20_000, "real").ravel()
+    uni = sample_indices(rng, t, 20_000, "uniform").ravel()
+    top_real = np.bincount(real % 1000).max()
+    top_uni = np.bincount(uni % 1000).max()
+    assert top_real > 3 * top_uni
+
+
+def test_query_batch_padding():
+    rng = np.random.default_rng(0)
+    wl = small_workload(batch=16)
+    q = query_batch(rng, wl)
+    s_max = max(t.seq for t in wl.tables)
+    assert q.shape == (len(wl.tables), 16, s_max)
+    for i, t in enumerate(wl.tables):
+        assert (q[i, :, t.seq :] == -1).all()
+        assert (q[i, :, : t.seq] >= 0).all()
+
+
+def test_workload_stats_match_paper_scale():
+    """Fig 2 sanity: criteo is GB-scale, kuairec sub-MB, huawei ~25 MB."""
+    assert WORKLOADS["criteo-1tb"].total_bytes > 5 * 2**30
+    assert WORKLOADS["kuairec-big"].total_bytes < 2**20
+    assert abs(WORKLOADS["huawei-25mb"].total_bytes - 25 * 2**20) < 3 * 2**20
+    assert max(t.seq for t in WORKLOADS["huawei-25mb"].tables) <= 172
+
+
+# ---------------------------------------------------------------- sharding
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    """Every parameter's sharded dims divide the production mesh axes."""
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    b = registry.build(arch)
+    structs = b.param_struct()
+    specs = sh.param_pspecs(structs, multi_pod)
+
+    def check(path, leaf, spec):
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            k = 1
+            for a in axes:
+                k *= sizes[a]
+            assert dim % k == 0, (arch, path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), structs, specs
+    )
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mixtral-8x22b", "mamba2-780m",
+                                  "zamba2-1.2b", "whisper-small"])
+def test_cache_specs_divisible(arch):
+    b = registry.build(arch)
+    for shape_name in ("decode_32k", "long_500k"):
+        if not b.cfg.supports(shape_name):
+            continue
+        shape = SHAPES[shape_name]
+        struct = b.cache_struct(shape)
+        specs = sh.cache_pspecs(b.cfg, shape, False, 16)
+        for key, spec in specs.items():
+            leaf = struct[key]
+            for dim, ax in zip(leaf.shape, spec):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                k = 16 ** len([a for a in axes if a in ("data", "model")])
+                assert dim % k == 0, (arch, shape_name, key, leaf.shape, spec)
+
+
+def test_embed_is_vocab_sharded():
+    specs = sh.param_pspecs(registry.build("qwen3-0.6b").param_struct(), False)
+    assert specs["embed"] == P("model", None)  # the paper's row-chunked table
