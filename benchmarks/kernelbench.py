@@ -1,4 +1,4 @@
-"""Kernel-level strategy comparison (CPU wall-clock).
+"""Kernel-level strategy + layout comparison (CPU wall-clock).
 
 Measures the XLA-gather reference vs the four Pallas strategies in interpret
 mode (correctness path) and the partitioned executor's XLA path.  On CPU the
@@ -6,16 +6,28 @@ interpret-mode numbers are NOT performance-representative of TPU — the
 roofline/dry-run artifacts carry the TPU story — but this harness (a) proves
 the code paths run, (b) gives the ref-vs-ref speed baseline used in examples,
 and (c) is the hook real-TPU runs would use unchanged.
+
+``layout_scenario`` is the ragged-vs-dense packed-layout comparison on a
+Zipf-skewed 1-big+31-small workload (DESIGN.md §"Ragged packed layout"):
+pack bytes, padding fraction, and executor wall time for both layouts, written
+to ``BENCH_embedding_layout.json``.
 """
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import compat
+from repro.core import PartitionedEmbeddingBag, analytic_model, make_workload
 from repro.core.strategies import Strategy
 from repro.kernels import ops, ref
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def _time(fn, *args, iters: int = 5) -> float:
@@ -48,5 +60,71 @@ def run(csv: bool = True):
     return rows
 
 
+def zipf_skewed_workload(big_rows: int = 50_000, n_small: int = 31, batch: int = 128):
+    """The paper's pathological shape: one huge table + many tiny ones."""
+    rng = np.random.default_rng(0)
+    rows = [big_rows] + [int(x) for x in rng.integers(16, 256, n_small)]
+    return make_workload("zipf-skew", rows, dim=16, batch=batch, zipf_alpha=1.2)
+
+
+def layout_scenario(csv: bool = True, out_path: Path | None = None) -> dict:
+    """Ragged vs dense packed layout: bytes + executor wall time.
+
+    The asymmetric plan keeps every table asymmetric (high LIF threshold), so
+    one core carries the huge chunk while others carry handfuls of tiny
+    tables — exactly the shape where the dense stacked-slot layout pads every
+    slot to the global max_rows.
+    """
+    wl = zipf_skewed_workload()
+    n_dev = jax.device_count()
+    mesh = compat.make_mesh((1, n_dev), ("data", "model"))
+    bag = PartitionedEmbeddingBag(
+        wl, n_cores=n_dev, planner="asymmetric", cost_model=analytic_model(),
+        planner_kwargs=dict(lif_threshold=1e9, rock_theta=None),
+    )
+    params = bag.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    idx = [
+        jnp.asarray(rng.integers(0, t.rows, (wl.batch, t.seq)), jnp.int32)
+        for t in wl.tables
+    ]
+
+    record: dict = {
+        "workload": "zipf-skew-1big-31small",
+        "batch": wl.batch,
+        "n_tables": len(wl.tables),
+        "n_cores": n_dev,
+        "layouts": {},
+    }
+    for layout in ("ragged", "dense"):
+        packed = bag.pack(params, layout=layout)
+        summary = bag.layout_summary()
+        timings = {}
+        for mode, uk in (("xla", False), ("fused_interpret", "fused")):
+            fn = jax.jit(
+                lambda p, i, uk=uk: bag.apply(p, i, mesh=mesh, use_kernels=uk)
+            )
+            timings[f"{mode}_us"] = _time(fn, packed, idx, iters=2)
+        record["layouts"][layout] = {**summary, **timings}
+        if csv:
+            print(
+                f"kernelbench,layout_{layout},"
+                f"bytes={summary['chunk_bytes']},"
+                f"padding_frac={summary['padding_frac']:.3f},"
+                f"xla={timings['xla_us']:.0f}us,"
+                f"fused={timings['fused_interpret_us']:.0f}us"
+            )
+    r = record["layouts"]
+    record["bytes_shrink_vs_dense"] = (
+        r["dense"]["chunk_bytes"] / max(r["ragged"]["chunk_bytes"], 1)
+    )
+    if csv:
+        print(f"kernelbench,layout_shrink,{record['bytes_shrink_vs_dense']:.2f}x")
+    out_path = out_path or _REPO_ROOT / "BENCH_embedding_layout.json"
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
 if __name__ == "__main__":
     run()
+    layout_scenario()

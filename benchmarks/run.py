@@ -21,6 +21,7 @@ def main() -> None:
         ("table1 (P99/TPS, 6 workloads x 3 dists x 3 strategies)", table1.run),
         ("fig4 (throughput-P99 Pareto over batch)", fig4.run),
         ("kernelbench (strategy kernels, CPU)", kernelbench.run),
+        ("kernelbench layout (ragged vs dense packing)", kernelbench.layout_scenario),
     ]
     failures = 0
     for name, fn in sections:

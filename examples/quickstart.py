@@ -16,6 +16,7 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro import compat
 from repro.core import (
     PartitionedEmbeddingBag,
     TPU_V5E,
@@ -30,8 +31,7 @@ def main():
     hw = dataclasses.replace(TPU_V5E, l1_bytes=4096)  # tiny L1 to exercise chunking
     model = analytic_model(hw)
     wl = small_workload(batch=64)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
     idx = jax.numpy.asarray(query_batch(rng, wl, "real"))
 

@@ -17,6 +17,7 @@ import dataclasses
 import jax
 import numpy as np
 
+from repro import compat
 from repro.core import PartitionedEmbeddingBag, TPU_V5E, analytic_model
 from repro.data.synthetic import ctr_batch
 from repro.data.workloads import small_workload
@@ -34,8 +35,7 @@ def main():
     model = analytic_model(hw)
     wl = small_workload(batch=args.batch)
     cfg = DLRMConfig(arch="dlrm-serve", workload=wl, embed_dim=16)
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     params = init_dlrm(cfg, jax.random.PRNGKey(0))
 
     for planner in ("symmetric", "asymmetric"):
@@ -51,7 +51,8 @@ def main():
             idx = jax.numpy.stack([p["indices"] for p in payloads], axis=1)
             return jax.block_until_ready(infer(dense, idx))
 
-        srv = Server(step, max_batch=args.batch, max_wait_s=0.001)
+        srv = Server(step, max_batch=args.batch, max_wait_s=0.001,
+                     layout=bag.layout_summary())
         rng = np.random.default_rng(0)
         for dist in ("uniform", "real", "fixed"):
             for i in range(args.queries // args.batch):

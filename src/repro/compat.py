@@ -1,0 +1,56 @@
+"""Version compatibility shims for the jax API surface this repo targets.
+
+The codebase is written against the current jax API (``jax.shard_map``,
+``jax.sharding.AxisType``, ``lax.axis_size``, ``pltpu.CompilerParams``); older
+releases spell these differently (``jax.experimental.shard_map.shard_map`` with
+``check_rep``, no axis types, ``pltpu.TPUCompilerParams``).  Everything that
+touches one of the moved names goes through this module so the rest of the
+code can stay written against the modern spelling.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Sequence
+
+import jax
+from jax import lax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with fallback to ``jax.experimental.shard_map``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str]):
+    """``jax.make_mesh`` with Auto axis types when the API supports them."""
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType") and (
+        "axis_types" in inspect.signature(jax.make_mesh).parameters
+    ):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def axis_size(axis_name: str):
+    """``lax.axis_size`` fallback: psum of ones over the axis."""
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    return lax.psum(1, axis_name)
+
+
+def tpu_compiler_params(*, dimension_semantics: tuple[str, ...]):
+    """``pltpu.CompilerParams`` (new) / ``pltpu.TPUCompilerParams`` (old)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(dimension_semantics=dimension_semantics)

@@ -45,6 +45,7 @@ class PartitionedEmbeddingBag:
     cost_model: CostModel | None = None
     dtype: jnp.dtype = jnp.float32
     planner_kwargs: dict = dataclasses.field(default_factory=dict)
+    layout: str = "ragged"  # "ragged" (memory-proportional) or "dense"
 
     def __post_init__(self):
         self.cost_model = self.cost_model or analytic_model()
@@ -66,8 +67,20 @@ class PartitionedEmbeddingBag:
             for k, t in zip(keys, self.workload.tables)
         ]
 
-    def pack(self, table_data: Sequence[jax.Array] | None) -> PackedPlan:
-        return pack_plan(self.plan, self.workload.tables, table_data, dtype=self.dtype)
+    def pack(
+        self, table_data: Sequence[jax.Array] | None, *, layout: str | None = None
+    ) -> PackedPlan:
+        return pack_plan(
+            self.plan,
+            self.workload.tables,
+            table_data,
+            dtype=self.dtype,
+            layout=layout or self.layout,
+        )
+
+    def layout_summary(self) -> dict:
+        """Packing-efficiency summary recorded by the last :meth:`pack`."""
+        return dict(self.plan.meta.get("layout", {}))
 
     # -- execution ----------------------------------------------------------
 

@@ -3,23 +3,31 @@
 The paper places table *chunks* in individual cores' L1 buffers, subtracts the
 chunk offset from the indices, clips them to avoid out-of-bounds accesses, and
 combines partial pools with atomic inter-core accumulation.  The TPU-native
-rendering (DESIGN.md §2):
+rendering (DESIGN.md §2, §"Ragged packed layout"):
 
-* the per-core chunk inventory is materialized as a *stacked slot array*
-  ``(K, max_slots, max_rows+1, E)`` sharded over the ``"model"`` mesh axis —
-  every device holds its own (different!) chunks: the asymmetric layout;
+* the per-core chunk inventory is materialized as a *ragged packed buffer*
+  ``(K, R_total+1, E)`` sharded over the ``"model"`` mesh axis — every device
+  holds its own (different!) chunks concatenated row-wise, plus small int32
+  per-slot metadata (``slot_row_start``, ``slot_rows``, …): the asymmetric
+  layout.  Memory is ``K·(ΣR_i)·E`` instead of the dense stacked-slot layout's
+  ``K·S·R_max·E`` (the dense layout is kept as ``layout="dense"`` for
+  comparison benchmarks);
 * each device loops (``lax.scan``) over its slots, performing the
   offset-subtract / clip / zero-row-redirect lookup with the slot's assigned
-  data-flow strategy (``lax.switch`` over the four Pallas kernels);
+  data-flow strategy (``lax.switch`` over the four Pallas kernels), or runs
+  ONE fused multi-slot pallas_call over a precomputed (slot, row-block)
+  step schedule (``use_kernels="fused"``);
 * "atomic inter-core accumulation" is a single ``lax.psum`` over the axis
   (or a ring reduce-scatter in the overlapped §Perf variant);
 * the LIF symmetric fallback group executes batch-split over the same axis and
   rejoins with an ``all_gather``.
 
-Every chunk is padded to ``max_rows`` and carries one trailing zero row; all
-invalid lookups (out-of-chunk, sequence padding ``-1``, empty slots, other
-replicas' batch rows) are redirected to the zero row, so no post-hoc masking
-of the pooled result is needed and the pooling can stay fused in the kernels.
+Each chunk's region in the ragged buffer is padded to a ``block_r`` multiple
+with at least one zero row after the data, and the buffer carries one shared
+trailing zero row; all invalid lookups (out-of-chunk, sequence padding ``-1``,
+empty slots, other replicas' batch rows) are redirected to a zero row, so no
+post-hoc masking of the pooled result is needed and the pooling can stay
+fused in the kernels.
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import compat
 from repro.core.strategies import Plan, Strategy
 from repro.core.tables import TableSpec
 from repro.kernels.embedding_gm import embedding_bag_gm
@@ -46,40 +55,73 @@ STRATEGY_CODE: dict[Strategy, int] = {
 }
 
 _ROW_PAD = 8  # sublane-friendly row padding
+_RAGGED_BLOCK_R = 512  # row-block cap for the ragged fused-kernel schedule
+_RAGGED_BLOCK_R_MIN = 64  # floor: bounds step count; wastes < 64 rows/chunk
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class PackedPlan:
     """Array-ified Plan. ``chunk_data``/slot metadata are sharded over the
-    core axis; symmetric tables are replicated (small by construction)."""
+    core axis; symmetric tables are replicated (small by construction).
+
+    ``layout="ragged"`` (default): ``chunk_data`` is ``(K, R_total+1, E)``
+    with each core's chunks concatenated row-wise (``slot_row_start`` gives
+    each slot's first row) and the ``step_*`` arrays hold the fused kernel's
+    per-core (slot, row-block) schedule.  ``layout="dense"`` keeps the legacy
+    stacked-slot ``(K, S, R_max+1, E)`` form (no ``step_*`` schedule).
+    """
 
     # asymmetric slots
-    chunk_data: Any  # (K, S, R+1, E)
+    chunk_data: Any  # ragged: (K, R_total+1, E); dense: (K, S, R+1, E)
     slot_table: Any  # (K, S) int32, -1 = empty
-    slot_offset: Any  # (K, S) int32
+    slot_offset: Any  # (K, S) int32 row offset within the source table
     slot_rows: Any  # (K, S) int32
+    slot_row_start: Any  # (K, S) int32 first row in the ragged buffer
     slot_strategy: Any  # (K, S) int32
     slot_rep: Any  # (K, S) int32
     slot_nrep: Any  # (K, S) int32
+    # fused-kernel step schedule (ragged layout only; (K, 0) otherwise)
+    step_slot: Any  # (K, T) int32 slot id per step (S = trash slot)
+    step_base: Any  # (K, T) int32 chunk-local first row of the step's block
+    step_block: Any  # (K, T) int32 row-block index into the ragged buffer
     # symmetric fallback group (replicated)
     sym_data: Any  # (Nsym, Msym+1, E)
     sym_table: Any  # (Nsym,) int32
     sym_rows: Any  # (Nsym,) int32
     sym_strategy: Any  # (Nsym,) int32
+    # static layout descriptors (pytree aux data)
+    layout: str = "ragged"
+    block_r: int = 0  # fused-kernel row-block size (ragged)
+    slot_window: int = 0  # per-slot kernel window rows (ragged)
+
+    _ARRAY_FIELDS = (
+        "chunk_data", "slot_table", "slot_offset", "slot_rows",
+        "slot_row_start", "slot_strategy", "slot_rep", "slot_nrep",
+        "step_slot", "step_base", "step_block",
+        "sym_data", "sym_table", "sym_rows", "sym_strategy",
+    )
 
     def tree_flatten(self):
-        fields = dataclasses.fields(self)
-        return tuple(getattr(self, f.name) for f in fields), None
+        children = tuple(getattr(self, f) for f in self._ARRAY_FIELDS)
+        aux = (self.layout, self.block_r, self.slot_window)
+        return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        del aux
-        return cls(*children)
+        return cls(*children, *aux)
 
     @property
     def n_cores(self) -> int:
         return self.chunk_data.shape[0]
+
+    @property
+    def chunk_bytes(self) -> int:
+        return int(np.prod(self.chunk_data.shape)) * self.chunk_data.dtype.itemsize
+
+
+def _align(n: int, mult: int) -> int:
+    return int(-(-n // mult) * mult)
 
 
 def pack_plan(
@@ -88,12 +130,21 @@ def pack_plan(
     table_data: Sequence[jax.Array] | None,
     *,
     dtype=jnp.float32,
+    layout: str = "ragged",
+    block_r: int | None = None,
 ) -> PackedPlan:
-    """Materialize a Plan into stacked slot arrays.
+    """Materialize a Plan into the packed executor layout.
 
     ``table_data[i]`` is the (m_i, E) array for table i, or ``None`` for
     abstract packing (zeros; used by tests/dry-runs that only need shapes).
+
+    ``layout="ragged"`` concatenates each core's chunks row-wise (the memory-
+    proportional layout); ``layout="dense"`` pads every slot to the global
+    ``max_rows`` (the legacy layout, kept for comparison).  A ``layout``
+    summary (bytes, padding fraction) is recorded in ``plan.meta`` either way.
     """
+    if layout not in ("ragged", "dense"):
+        raise ValueError(f"unknown layout {layout!r}")
     e = tables[0].dim
     if any(t.dim != e for t in tables):
         raise ValueError("all tables must share the embedding dim E")
@@ -102,51 +153,149 @@ def pack_plan(
     max_slots = max((len(v) for v in per_core.values()), default=0)
     max_slots = max(max_slots, 1)
     max_rows = max((a.rows for a in plan.assignments), default=1)
-    max_rows = int(-(-max_rows // _ROW_PAD) * _ROW_PAD)
+    max_rows_pad = _align(max_rows, _ROW_PAD)
 
     def tbl(i):
         if table_data is None:
             return jnp.zeros((tables[i].rows, e), dtype)
         return table_data[i].astype(dtype)
 
-    chunk_data = np.zeros((k, max_slots), dtype=object)
     slot_table = -np.ones((k, max_slots), np.int32)
     slot_offset = np.zeros((k, max_slots), np.int32)
     slot_rows = np.zeros((k, max_slots), np.int32)
+    slot_row_start = np.zeros((k, max_slots), np.int32)
     slot_strategy = np.zeros((k, max_slots), np.int32)
     slot_rep = np.zeros((k, max_slots), np.int32)
     slot_nrep = np.ones((k, max_slots), np.int32)
 
-    blocks = []
     for core in range(k):
-        row = []
-        for s_i in range(max_slots):
+        for s_i, a in enumerate(per_core.get(core, [])):
+            slot_table[core, s_i] = a.table_idx
+            slot_offset[core, s_i] = a.row_offset
+            slot_rows[core, s_i] = a.rows
+            slot_strategy[core, s_i] = STRATEGY_CODE[a.strategy]
+            slot_rep[core, s_i] = a.batch_frac[0]
+            slot_nrep[core, s_i] = a.batch_frac[1]
+            if a.row_offset + a.rows > tables[a.table_idx].rows:
+                raise ValueError("chunk exceeds table rows")
+
+    itemsize = jnp.dtype(dtype).itemsize
+    dense_bytes = k * max_slots * (max_rows_pad + 1) * e * itemsize
+
+    if layout == "dense":
+        blocks = []
+        for core in range(k):
+            row = []
             assigns = per_core.get(core, [])
-            if s_i < len(assigns):
-                a = assigns[s_i]
-                slot_table[core, s_i] = a.table_idx
-                slot_offset[core, s_i] = a.row_offset
-                slot_rows[core, s_i] = a.rows
-                slot_strategy[core, s_i] = STRATEGY_CODE[a.strategy]
-                slot_rep[core, s_i] = a.batch_frac[0]
-                slot_nrep[core, s_i] = a.batch_frac[1]
-                if a.row_offset + a.rows > tables[a.table_idx].rows:
-                    raise ValueError("chunk exceeds table rows")
-                chunk = tbl(a.table_idx)[a.row_offset : a.row_offset + a.rows]
-                pad = max_rows + 1 - chunk.shape[0]
-                chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
-            else:
-                chunk = jnp.zeros((max_rows + 1, e), dtype)
-            row.append(chunk)
-        blocks.append(jnp.stack(row))
-    chunk_arr = jnp.stack(blocks)  # (K, S, R+1, E)
+            for s_i in range(max_slots):
+                if s_i < len(assigns):
+                    a = assigns[s_i]
+                    chunk = tbl(a.table_idx)[a.row_offset : a.row_offset + a.rows]
+                    pad = max_rows_pad + 1 - chunk.shape[0]
+                    chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
+                else:
+                    chunk = jnp.zeros((max_rows_pad + 1, e), dtype)
+                row.append(chunk)
+            blocks.append(jnp.stack(row))
+        chunk_arr = jnp.stack(blocks)  # (K, S, R+1, E)
+        step_slot = np.zeros((k, 0), np.int32)
+        step_base = np.zeros((k, 0), np.int32)
+        step_block = np.zeros((k, 0), np.int32)
+        br = 0
+        slot_window = 0
+    else:
+        # ragged: per core, concatenate chunks row-wise; each chunk's region
+        # is padded to a block_r multiple (>= 1 zero row after the data, the
+        # slot's redirect target), so the fused kernel's row-blocks tile it.
+        # block_r is sized off the SMALLEST real chunk: the quantum bounds
+        # each chunk's padding, while big chunks just take more steps (cheap:
+        # the steps are the streaming DMAs the kernel does anyway).  Packing
+        # each core's largest chunk last makes the per-slot kernel window
+        # [row_start, row_start+slot_window) end exactly at the core total —
+        # no window tail padding.
+        min_rows = min((a.rows for a in plan.assignments), default=1)
+        br = block_r or min(
+            _RAGGED_BLOCK_R,
+            max(_align(min_rows + 1, _ROW_PAD), _RAGGED_BLOCK_R_MIN),
+        )
+        br = max(_align(br, _ROW_PAD), _ROW_PAD)
+        core_order: dict[int, list[int]] = {
+            core: sorted(
+                range(len(per_core.get(core, []))),
+                key=lambda s_i: per_core[core][s_i].rows,
+            )
+            for core in range(k)
+        }
+        steps: list[list[tuple[int, int, int]]] = []
+        slot_window = br
+        t_needed = br
+        for core in range(k):
+            cur = 0
+            core_steps: list[tuple[int, int, int]] = []
+            for s_i in core_order[core]:
+                a = per_core[core][s_i]
+                alloc = _align(a.rows + 1, br)
+                slot_row_start[core, s_i] = cur
+                for j in range(alloc // br):
+                    core_steps.append((s_i, j * br, cur // br + j))
+                cur += alloc
+                slot_window = max(slot_window, alloc)
+            steps.append(core_steps)
+            t_needed = max(t_needed, cur)
+        # every per-slot kernel window [row_start, row_start+slot_window) must
+        # stay in bounds; ascending-size packing makes this the core total
+        # except when another core owns the largest chunk.
+        for core in range(k):
+            for s_i in range(max_slots):
+                if slot_table[core, s_i] >= 0:
+                    t_needed = max(
+                        t_needed, int(slot_row_start[core, s_i]) + slot_window
+                    )
+        t_pad = _align(t_needed, br)
+
+        buf = np.zeros((k, t_pad + 1, e), jnp.dtype(dtype).name)
+        for core in range(k):
+            for s_i, a in enumerate(per_core.get(core, [])):
+                start = int(slot_row_start[core, s_i])
+                chunk = np.asarray(
+                    tbl(a.table_idx)[a.row_offset : a.row_offset + a.rows]
+                )
+                buf[core, start : start + a.rows] = chunk
+        chunk_arr = jnp.asarray(buf)
+
+        # uniform step count across cores (shard_map runs one program);
+        # padding steps target the trash slot (id = max_slots) with base 0,
+        # so they init-write zeros into a discarded output block.
+        n_steps = max((len(s) for s in steps), default=0)
+        step_slot = np.full((k, n_steps), max_slots, np.int32)
+        step_base = np.zeros((k, n_steps), np.int32)
+        step_block = np.zeros((k, n_steps), np.int32)
+        for core, core_steps in enumerate(steps):
+            for t, (s_i, base, blk) in enumerate(core_steps):
+                step_slot[core, t] = s_i
+                step_base[core, t] = base
+                step_block[core, t] = blk
+
+    ragged_bytes = int(np.prod(chunk_arr.shape)) * itemsize
+    plan.meta["layout"] = {
+        "kind": layout,
+        "chunk_bytes": ragged_bytes,
+        "dense_bytes": dense_bytes,
+        "bytes_vs_dense": ragged_bytes / max(dense_bytes, 1),
+        "block_r": br,
+        "slot_window": slot_window,
+        "n_steps": int(step_slot.shape[1]),
+        "padding_frac": 1.0
+        - sum(a.rows for a in plan.assignments)
+        * e * itemsize / max(ragged_bytes, 1),
+    }
 
     # symmetric group
     sym_idx = list(plan.symmetric_tables)
     n_sym = len(sym_idx)
     if n_sym:
         msym = max(tables[i].rows for i in sym_idx)
-        msym = int(-(-msym // _ROW_PAD) * _ROW_PAD)
+        msym = _align(msym, _ROW_PAD)
         sym_blocks = []
         for i in sym_idx:
             t = tbl(i)
@@ -168,13 +317,20 @@ def pack_plan(
         slot_table=jnp.asarray(slot_table),
         slot_offset=jnp.asarray(slot_offset),
         slot_rows=jnp.asarray(slot_rows),
+        slot_row_start=jnp.asarray(slot_row_start),
         slot_strategy=jnp.asarray(slot_strategy),
         slot_rep=jnp.asarray(slot_rep),
         slot_nrep=jnp.asarray(slot_nrep),
+        step_slot=jnp.asarray(step_slot),
+        step_base=jnp.asarray(step_base),
+        step_block=jnp.asarray(step_block),
         sym_data=sym_data,
         sym_table=jnp.asarray(sym_table),
         sym_rows=jnp.asarray(sym_rows),
         sym_strategy=jnp.asarray(sym_strategy),
+        layout=layout,
+        block_r=br,
+        slot_window=slot_window,
     )
 
 
@@ -205,6 +361,12 @@ def _bag_with_strategy(
 # --------------------------------------------------------------------------
 
 
+def _replica_bmask(packed: PackedPlan, b: int) -> jax.Array:
+    """(S, B) bool: which batch rows each slot's replica serves."""
+    bpos = jnp.arange(b, dtype=jnp.int32)
+    return (bpos[None, :] * packed.slot_nrep[:, None]) // b == packed.slot_rep[:, None]
+
+
 def _local_asym_lookup(
     packed: PackedPlan, indices: jax.Array, *, n_tables: int, use_kernels
 ) -> jax.Array:
@@ -214,20 +376,77 @@ def _local_asym_lookup(
     kernels (lax.switch); "fused" = ONE multi-slot pallas_call for the whole
     sweep (amortizes the per-table launch overhead the paper measures).
     """
+    if use_kernels == "fused":
+        return _fused_asym_lookup(packed, indices, n_tables=n_tables)
+    if packed.layout == "dense":
+        return _dense_asym_lookup(
+            packed, indices, n_tables=n_tables, use_kernels=use_kernels
+        )
+
+    _, b, _ = indices.shape
+    buffer = packed.chunk_data  # (T+1, E)
+    zrow = buffer.shape[0] - 1  # shared trailing zero row
+    e = buffer.shape[-1]
+    w = packed.slot_window
+    bpos = jnp.arange(b, dtype=jnp.int32)
+
+    def body(out, xs):
+        ti, off, rows, start, strat, rep, nrep = xs
+        idx = jnp.take(indices, jnp.maximum(ti, 0), axis=0)  # (B, s)
+        local = idx - off
+        valid = (idx >= 0) & (local >= 0) & (local < rows) & (ti >= 0)
+        # replica r of n serves the r-th contiguous batch 1/n-slice.
+        bmask = (bpos * nrep) // b == rep
+        valid = valid & bmask[:, None]
+        if use_kernels:
+            # per-slot Pallas strategy kernels want a contiguous chunk: slice
+            # the slot's window out of the ragged buffer.  Row ``rows`` of the
+            # window is the slot's own zero row (alloc padding guarantees it).
+            # The scan needs a uniform static shape, so every slot pays the
+            # max-alloc window — the same O(S·R_max·E) traffic as the dense
+            # layout.  The ragged layout's DMA win needs ``use_kernels=
+            # "fused"``, whose row-block schedule streams only real rows.
+            window = lax.dynamic_slice(buffer, (start, 0), (w, e))
+            lidx = jnp.where(valid, local, rows).astype(jnp.int32)
+            pooled = _bag_with_strategy(window, lidx, strat, use_kernels)
+        else:
+            gidx = jnp.where(valid, start + local, zrow).astype(jnp.int32)
+            pooled = (
+                jnp.take(buffer, gidx, axis=0).astype(jnp.float32).sum(axis=1)
+            )
+        out = out.at[jnp.maximum(ti, 0)].add(
+            jnp.where(ti >= 0, pooled, jnp.zeros_like(pooled))
+        )
+        return out, None
+
+    out0 = jnp.zeros((n_tables, b, e), jnp.float32)
+    xs = (
+        packed.slot_table,
+        packed.slot_offset,
+        packed.slot_rows,
+        packed.slot_row_start,
+        packed.slot_strategy,
+        packed.slot_rep,
+        packed.slot_nrep,
+    )
+    out, _ = lax.scan(body, out0, xs)
+    return out
+
+
+def _dense_asym_lookup(
+    packed: PackedPlan, indices: jax.Array, *, n_tables: int, use_kernels
+) -> jax.Array:
+    """Legacy stacked-slot sweep over (S, R+1, E) chunk_data."""
     _, b, _ = indices.shape
     rpad = packed.chunk_data.shape[-2] - 1  # zero row index
     e = packed.chunk_data.shape[-1]
     bpos = jnp.arange(b, dtype=jnp.int32)
-
-    if use_kernels == "fused":
-        return _fused_asym_lookup(packed, indices, n_tables=n_tables)
 
     def body(out, xs):
         chunk, ti, off, rows, strat, rep, nrep = xs
         idx = jnp.take(indices, jnp.maximum(ti, 0), axis=0)  # (B, s)
         local = idx - off
         valid = (idx >= 0) & (local >= 0) & (local < rows) & (ti >= 0)
-        # replica r of n serves the r-th contiguous batch 1/n-slice.
         bmask = (bpos * nrep) // b == rep
         valid = valid & bmask[:, None]
         lidx = jnp.where(valid, local, rpad).astype(jnp.int32)
@@ -280,12 +499,14 @@ def _fused_asym_lookup(
     packed: PackedPlan, indices: jax.Array, *, n_tables: int
 ) -> jax.Array:
     """One fused pallas_call for all slots (kernels/embedding_multi.py)."""
-    from repro.kernels.embedding_multi import multi_embedding_bag
+    from repro.kernels.embedding_multi import (
+        multi_embedding_bag_dense,
+        multi_embedding_bag_ragged,
+    )
 
     _, b, _ = indices.shape
-    rpad = packed.chunk_data.shape[-2] - 1
     e = packed.chunk_data.shape[-1]
-    bpos = jnp.arange(b, dtype=jnp.int32)
+    interp = jax.default_backend() != "tpu"
 
     # vectorized slot preprocessing: (S, B, s) pre-clipped local indices
     ti = packed.slot_table  # (S,)
@@ -297,13 +518,29 @@ def _fused_asym_lookup(
         & (local < packed.slot_rows[:, None, None])
         & (ti >= 0)[:, None, None]
     )
-    bmask = (bpos[None, :] * packed.slot_nrep[:, None]) // b == packed.slot_rep[:, None]
-    valid = valid & bmask[:, :, None]
-    lidx = jnp.where(valid, local, rpad).astype(jnp.int32)
+    valid = valid & _replica_bmask(packed, b)[:, :, None]
 
-    pooled = multi_embedding_bag(
-        packed.chunk_data, lidx, interpret=jax.default_backend() != "tpu"
-    )  # (S, B, E) f32
+    if packed.layout == "dense":
+        rpad = packed.chunk_data.shape[-2] - 1
+        lidx = jnp.where(valid, local, rpad).astype(jnp.int32)
+        pooled = multi_embedding_bag_dense(
+            packed.chunk_data, lidx, interpret=interp
+        )  # (S, B, E) f32
+    elif packed.step_slot.shape[-1] == 0:
+        pooled = jnp.zeros((ti.shape[0], b, e), jnp.float32)
+    else:
+        # ragged: -1 sentinel (matches no row-block window in the kernel)
+        lidx = jnp.where(valid, local, -1).astype(jnp.int32)
+        pooled = multi_embedding_bag_ragged(
+            packed.chunk_data[:-1],  # drop the shared zero row: block_r-tiled
+            lidx,
+            packed.step_slot,
+            packed.step_base,
+            packed.step_block,
+            block_r=packed.block_r,
+            interpret=interp,
+        )  # (S, B, E) f32
+
     out = jnp.zeros((n_tables, b, e), jnp.float32)
     return out.at[jnp.maximum(ti, 0)].add(
         jnp.where((ti >= 0)[:, None, None], pooled, 0.0)
@@ -339,13 +576,11 @@ def partitioned_lookup(
         # shard_map leaves a leading size-1 core dim on the sharded arrays.
         packed_l = dataclasses.replace(
             packed_l,
-            chunk_data=packed_l.chunk_data[0],
-            slot_table=packed_l.slot_table[0],
-            slot_offset=packed_l.slot_offset[0],
-            slot_rows=packed_l.slot_rows[0],
-            slot_strategy=packed_l.slot_strategy[0],
-            slot_rep=packed_l.slot_rep[0],
-            slot_nrep=packed_l.slot_nrep[0],
+            **{
+                f: getattr(packed_l, f)[0]
+                for f in PackedPlan._ARRAY_FIELDS
+                if not f.startswith("sym_")
+            },
         )
         out = _local_asym_lookup(
             packed_l, idx, n_tables=n_tables, use_kernels=use_kernels
@@ -356,7 +591,7 @@ def partitioned_lookup(
             out = lax.psum(out, axis)
         # symmetric fallback: batch-split over the core axis.
         k = lax.axis_index(axis)
-        ksz = lax.axis_size(axis)
+        ksz = compat.axis_size(axis)
         b = idx.shape[1]
         bl = b // ksz
         idx_slice = lax.dynamic_slice_in_dim(idx, k * bl, bl, axis=1)
@@ -368,19 +603,15 @@ def partitioned_lookup(
 
     pspec = jax.sharding.PartitionSpec
     packed_specs = PackedPlan(
-        chunk_data=pspec(axis),
-        slot_table=pspec(axis),
-        slot_offset=pspec(axis),
-        slot_rows=pspec(axis),
-        slot_strategy=pspec(axis),
-        slot_rep=pspec(axis),
-        slot_nrep=pspec(axis),
-        sym_data=pspec(),
-        sym_table=pspec(),
-        sym_rows=pspec(),
-        sym_strategy=pspec(),
+        **{
+            f: (pspec() if f.startswith("sym_") else pspec(axis))
+            for f in PackedPlan._ARRAY_FIELDS
+        },
+        layout=packed.layout,
+        block_r=packed.block_r,
+        slot_window=packed.slot_window,
     )
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         spmd,
         mesh=mesh,
         in_specs=(packed_specs, bspec),
@@ -397,7 +628,7 @@ def _ring_psum(x: jax.Array, axis: str) -> jax.Array:
     t with the add of step t-1 (latency-hiding scheduler), replacing the
     blocking fused all-reduce at the tail of the slot sweep.
     """
-    ksz = lax.axis_size(axis)
+    ksz = compat.axis_size(axis)
     if ksz == 1:
         return x
     perm = [(i, (i + 1) % ksz) for i in range(ksz)]

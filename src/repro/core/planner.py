@@ -312,7 +312,6 @@ def plan_asymmetric(
             strat, cost = model.best_strategy(
                 chunk_tab, batch, 1, (Strategy.L1, Strategy.L1_UB)
             )
-            l1_left[core] -= it.bytes
         else:
             strat, cost = model.best_strategy(
                 chunk_tab, batch, 1, (Strategy.GM, Strategy.GM_UB)
@@ -328,23 +327,36 @@ def plan_asymmetric(
             # beyond-paper: split this chunk's batch over r cores.
             replicas = min(max_replicas, n_cores)
         if replicas == 1:
+            if strat.is_l1:
+                l1_left[core] -= it.bytes
             assignments.append(
                 ChunkAssignment(it.table_idx, core, it.row_offset, it.rows, strat)
             )
             load[core] += cost
         else:
-            rep_cost = model.predict(chunk_tab, batch // replicas, 1, strat)
+            # each replica serves a ceil-divided batch fraction, and the
+            # strategy is re-picked per replica core: the first core's L1
+            # state says nothing about the replica's core, and charging the
+            # first pick's cost would let a GM replica masquerade as L1.
+            rep_batch = -(-batch // replicas)
             for r in range(replicas):
                 c = int(np.argmin(load))
-                if strat.is_l1 and it.bytes <= l1_left[c]:
+                if it.bytes <= l1_left[c]:
+                    strat_r, rep_cost = model.best_strategy(
+                        chunk_tab, rep_batch, 1, (Strategy.L1, Strategy.L1_UB)
+                    )
                     l1_left[c] -= it.bytes
+                else:
+                    strat_r, rep_cost = model.best_strategy(
+                        chunk_tab, rep_batch, 1, (Strategy.GM, Strategy.GM_UB)
+                    )
                 assignments.append(
                     ChunkAssignment(
                         it.table_idx,
                         c,
                         it.row_offset,
                         it.rows,
-                        strat,
+                        strat_r,
                         batch_frac=(r, replicas),
                     )
                 )

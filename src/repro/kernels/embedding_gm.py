@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _gm_kernel(idx_ref, row_ref, out_ref, *, seq: int):
     """Accumulate one streamed row into the per-query output block."""
@@ -65,7 +67,7 @@ def embedding_bag_gm(
             out_specs=pl.BlockSpec((1, e), lambda bi, j, idx: (bi, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((b, e), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

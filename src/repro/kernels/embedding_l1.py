@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 
 def _l1_kernel(idx_ref, table_ref, out_ref, *, block_b: int, seq: int):
     bi = pl.program_id(0)
@@ -70,7 +72,7 @@ def embedding_bag_l1(
             out_specs=pl.BlockSpec((block_b, e), lambda bi, idx: (bi, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((bp, e), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -1,17 +1,32 @@
-"""Fused multi-table (multi-slot) embedding-bag kernel.
+"""Fused multi-table (multi-slot) embedding-bag kernels.
 
 The asymmetric executor's inner loop is "for each chunk slot: pooled lookup"
 — per-slot kernel launches dominate for workloads with many small tables
-(the paper's per-table launch overhead, §IV).  This kernel fuses the whole
-slot sweep into ONE ``pallas_call``:
+(the paper's per-table launch overhead, §IV).  These kernels fuse the whole
+slot sweep into ONE ``pallas_call``.
 
-* grid = (slots, batch tiles); each grid step brings slot ``si``'s chunk
-  HBM→VMEM via its BlockSpec (double-buffered across slots by the pipeline —
-  GM-style streaming at chunk granularity, VMEM-resident across the batch
-  tiles of that slot because the batch axis iterates minor);
-* indices arrive scalar-prefetched, pre-clipped to the slot's local row
-  space with invalid lookups redirected to the trailing zero row (the same
-  convention as core.partition).
+:func:`multi_embedding_bag_ragged` (default layout) runs over the ragged
+packed buffer (core.partition ``layout="ragged"``):
+
+* the host-side pack step emits a (slot, row-block) *step schedule* — one
+  step per ``block_r`` rows of each chunk, so total grid work is proportional
+  to ΣR_i, not slots x R_max;
+* grid = (batch tiles, steps); each step brings one ``(block_r, E)`` row
+  window of the buffer HBM→VMEM via a scalar-prefetch-driven BlockSpec
+  (double-buffered across steps by the pipeline — GM-style streaming at
+  row-block granularity), so VMEM residency is per-chunk-block, never
+  per-padded-max;
+* the lookup is **vectorized**: the step's ``(block_b, s)`` index tile is
+  compared against the row-block's local iota, and the resulting one-hot
+  count matrix pools the window on the MXU (``counts @ window``) — no serial
+  per-index ``dynamic_slice`` loop, and out-of-window / invalid (``-1``)
+  indices contribute exact zeros without any redirect row;
+* consecutive steps of one slot accumulate into the same output block
+  (``step_base == 0`` marks the first block and init-writes); schedule
+  padding steps target a trash slot and init-write zeros there.
+
+:func:`multi_embedding_bag_dense` is the legacy kernel over the dense
+stacked-slot ``(S, R+1, E)`` layout, kept for layout comparison benchmarks.
 
 Output: (slots, B, E) pooled partials, scatter-added per table by the caller.
 """
@@ -24,8 +39,104 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
 
-def _multi_kernel(idx_ref, chunk_ref, out_ref, *, block_b: int, seq: int, batch: int):
+
+# --------------------------------------------------------------------------
+# ragged layout: vectorized row-block schedule
+# --------------------------------------------------------------------------
+
+
+def _ragged_kernel(
+    slot_ref, base_ref, blk_ref, idx_ref, window_ref, out_ref, *, block_r: int
+):
+    del slot_ref, blk_ref  # consumed by the index_maps
+    t = pl.program_id(1)
+    base = base_ref[t]
+    # (block_b, s) chunk-local indices; -1 never matches a window row.
+    rel = idx_ref[0] - base
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_r), 2)
+    onehot = (rel[:, :, None] == iota).astype(jnp.float32)  # (Bt, s, block_r)
+    counts = onehot.sum(axis=1)  # (Bt, block_r)
+    partial = jnp.dot(
+        counts,
+        window_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(base == 0)
+    def _init():
+        out_ref[0] = partial
+
+    @pl.when(base > 0)
+    def _acc():
+        out_ref[0] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_b", "interpret"))
+def multi_embedding_bag_ragged(
+    buffer: jax.Array,  # (T, E) ragged packed buffer, T % block_r == 0
+    lidx: jax.Array,  # (S, B, s) int32 chunk-local indices, -1 = skip
+    step_slot: jax.Array,  # (n_steps,) int32, S = trash slot (padding step)
+    step_base: jax.Array,  # (n_steps,) int32 chunk-local block base row
+    step_block: jax.Array,  # (n_steps,) int32 buffer row-block index
+    *,
+    block_r: int,
+    block_b: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """All slots' pooled lookups in one pallas_call -> (S, B, E) f32."""
+    t_rows, e = buffer.shape
+    s_slots, b, seq = lidx.shape
+    n_steps = step_slot.shape[0]
+    if t_rows % block_r:
+        raise ValueError("buffer rows must be a multiple of block_r")
+    block_b = min(block_b, b)
+    pad_b = (-b) % block_b
+    # trash slot S absorbs schedule padding steps; its indices never match.
+    lidx = jnp.pad(lidx, ((0, 1), (0, pad_b), (0, 0)), constant_values=-1)
+    bp = b + pad_b
+
+    kernel = functools.partial(_ragged_kernel, block_r=block_r)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(bp // block_b, n_steps),
+            in_specs=[
+                # the step's slot index tile (resident across the slot's steps)
+                pl.BlockSpec(
+                    (1, block_b, seq), lambda bi, t, ss, sb, sk: (ss[t], bi, 0)
+                ),
+                # the step's (block_r, E) row window of the ragged buffer:
+                # streamed HBM->VMEM, double-buffered by the pipeline.
+                pl.BlockSpec((block_r, e), lambda bi, t, ss, sb, sk: (sk[t], 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, block_b, e), lambda bi, t, ss, sb, sk: (ss[t], bi, 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((s_slots + 1, bp, e), jnp.float32),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(
+        step_slot.astype(jnp.int32),
+        step_base.astype(jnp.int32),
+        step_block.astype(jnp.int32),
+        lidx.astype(jnp.int32),
+        buffer,
+    )
+    return out[:s_slots, :b]
+
+
+# --------------------------------------------------------------------------
+# dense stacked-slot layout (legacy, kept for layout comparisons)
+# --------------------------------------------------------------------------
+
+
+def _dense_kernel(idx_ref, chunk_ref, out_ref, *, block_b: int, seq: int, batch: int):
     si = pl.program_id(0)
     bi = pl.program_id(1)
 
@@ -47,7 +158,7 @@ def _multi_kernel(idx_ref, chunk_ref, out_ref, *, block_b: int, seq: int, batch:
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
-def multi_embedding_bag(
+def multi_embedding_bag_dense(
     chunks: jax.Array,  # (S, R+1, E) — slot chunk stack, trailing zero row
     lidx: jax.Array,  # (S, B, s) int32, pre-clipped local indices
     *,
@@ -65,7 +176,7 @@ def multi_embedding_bag(
     flat_idx = lidx.reshape(-1).astype(jnp.int32)
 
     kernel = functools.partial(
-        _multi_kernel, block_b=block_b, seq=seq, batch=bp
+        _dense_kernel, block_b=block_b, seq=seq, batch=bp
     )
     out = pl.pallas_call(
         kernel,
@@ -81,9 +192,13 @@ def multi_embedding_bag(
             ),
         ),
         out_shape=jax.ShapeDtypeStruct((s_slots, bp, e), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,
     )(flat_idx, chunks)
     return out[:, :b]
+
+
+# Backwards-compatible alias: the fused entry point used to be dense-only.
+multi_embedding_bag = multi_embedding_bag_dense

@@ -26,7 +26,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (TPU lowering)
+
+from repro import compat
 
 
 def _ub_kernel(idx_ref, table_ref, out_ref, *, block_m: int):
@@ -98,7 +100,7 @@ def embedding_bag_ub(
         ],
         out_specs=pl.BlockSpec((block_b, e), lambda bi, c: (bi, 0)),
         out_shape=jax.ShapeDtypeStruct((bp, e), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

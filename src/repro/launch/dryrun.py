@@ -37,7 +37,7 @@ import jax.numpy as jnp
 
 from repro import sharding as sh
 from repro.configs.base import SHAPES, ShapeCfg
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, xla_cost_analysis
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import transformer as T
 from repro.models.registry import build
@@ -240,7 +240,7 @@ def run_cell(
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = xla_cost_analysis(compiled)
         text = compiled.as_text()
         hlo = analyze_hlo(text)
         record = {

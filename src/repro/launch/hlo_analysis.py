@@ -176,6 +176,26 @@ class HloCost:
         }
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Newer jax returns one flat dict; older releases return a list with one
+    dict per computation (indexing it with a string raises ``TypeError``).
+    Returns a single merged ``{metric: value}`` dict either way.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    merged: dict = defaultdict(float)
+    for entry in cost:
+        for k, v in entry.items():
+            if isinstance(v, (int, float)):
+                merged[k] += v
+    return dict(merged)
+
+
 def analyze_hlo(text: str) -> HloCost:
     comps, entry = parse_module(text)
     # symbol table: instr name -> (elems, bytes, dims)

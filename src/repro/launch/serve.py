@@ -15,6 +15,7 @@ import time
 import jax
 import numpy as np
 
+from repro import compat
 from repro.core import PartitionedEmbeddingBag, analytic_model
 from repro.core.cost_model import TPU_V5E
 from repro.data.synthetic import ctr_batch
@@ -33,26 +34,32 @@ def main(argv=None):
     p.add_argument("--queries", type=int, default=2048)
     p.add_argument("--distribution", default="real",
                    choices=["uniform", "real", "fixed", "all"])
+    p.add_argument("--layout", default="ragged", choices=["ragged", "dense"],
+                   help="packed chunk layout for the asymmetric executor")
     args = p.parse_args(argv)
 
     wl = (small_workload(batch=args.batch) if args.workload == "smoke"
           else get_workload(args.workload, args.batch))
     cfg = DLRMConfig(arch=f"dlrm-{args.workload}", workload=wl)
     n_dev = jax.device_count()
-    mesh = jax.make_mesh(
-        (1, n_dev), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    mesh = compat.make_mesh((1, n_dev), ("data", "model"))
     model = analytic_model(TPU_V5E)
     bag = PartitionedEmbeddingBag(
         wl, n_cores=n_dev, planner=args.planner, cost_model=model,
         planner_kwargs=dict(shard_rocks=True) if args.planner == "asymmetric" else {},
+        layout=args.layout,
     )
     print(f"[serve] {wl.summary()}")
     print(f"[serve] plan: {len(bag.plan.assignments)} chunks, "
           f"{len(bag.plan.symmetric_tables)} symmetric, {n_dev} devices")
     params = init_dlrm(cfg, jax.random.PRNGKey(0))
     packed = bag.pack(params["tables"])
+    lay = bag.layout_summary()
+    if lay:
+        print(f"[serve] layout={lay['kind']} chunk_bytes={lay['chunk_bytes']:,} "
+              f"(dense would be {lay['dense_bytes']:,}; "
+              f"{lay['bytes_vs_dense']:.2%} of dense, "
+              f"padding_frac={lay['padding_frac']:.2%})")
 
     @jax.jit
     def infer(batch):

@@ -58,6 +58,7 @@ class Server:
         max_wait_s: float = 0.005,
         hedge_factor: float = 3.0,
         n_replicas: int = 2,
+        layout: dict | None = None,
     ):
         self.step_fn = step_fn
         self.batcher = Batcher(max_batch, max_wait_s)
@@ -66,6 +67,9 @@ class Server:
         self.n_replicas = max(n_replicas, 1)
         self.hedges = 0
         self._exec_times: list[float] = []
+        # packed-layout summary (plan.meta["layout"]) so deployment stats
+        # report the executor's memory/padding efficiency alongside latency.
+        self.layout = dict(layout) if layout else {}
 
     def submit(self, payload: Any) -> None:
         self.batcher.submit(payload)
@@ -102,4 +106,6 @@ class Server:
     def stats(self) -> dict:
         s = self.tracker.summary()
         s["hedged_batches"] = self.hedges
+        if self.layout:
+            s["layout"] = dict(self.layout)
         return s

@@ -1,0 +1,43 @@
+"""Optional-``hypothesis`` shim so property tests collect on clean envs.
+
+``from _hypothesis_compat import given, settings, st`` behaves exactly like
+the real hypothesis import when the package is installed; otherwise ``@given``
+replaces the test with a skip placeholder (and ``st.*``/``@settings`` become
+inert), so the rest of the module still collects and runs.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on clean environments
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call chain and returns itself."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():  # pragma: no cover
+                pass
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco

@@ -3,7 +3,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cost_model import ASCEND_910, TPU_V5E, CostModel, analytic_model
 from repro.core.planner import (

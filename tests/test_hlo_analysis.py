@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 
-from repro.launch.hlo_analysis import analyze_hlo, parse_module
+from repro.launch.hlo_analysis import analyze_hlo, parse_module, xla_cost_analysis
 
 
 def test_scan_flops_trip_multiplied():
@@ -19,7 +19,7 @@ def test_scan_flops_trip_multiplied():
     analytic = 6 * 2 * 4 * 128 * 128
     assert abs(cost.flops - analytic) / analytic < 0.1
     # raw XLA undercounts by ~trip count
-    assert c.cost_analysis()["flops"] < cost.flops / 3
+    assert xla_cost_analysis(c)["flops"] < cost.flops / 3
 
 
 def test_nested_scan():

@@ -1,0 +1,259 @@
+"""Ragged packed layout: parity vs the oracle and the legacy dense layout.
+
+Single-process execution (interpret mode on CPU): the per-core partials are
+computed by calling the executor's local sweep directly per core and summing
+— exactly the psum the SPMD path performs — plus the batch-split symmetric
+fallback, so every layout/kernel combination is checked against the pure-jnp
+oracle without needing a multi-device mesh.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PartitionedEmbeddingBag, analytic_model, make_workload
+from repro.core.cost_model import TPU_V5E
+from repro.core.embedding import stack_indices
+from repro.core.partition import (
+    PackedPlan,
+    _local_asym_lookup,
+    _local_sym_lookup,
+    pack_plan,
+)
+from repro.core.strategies import ChunkAssignment, Plan, Strategy
+
+E = 16
+
+
+def _small_model(l1_bytes=4096):
+    return analytic_model(dataclasses.replace(TPU_V5E, l1_bytes=l1_bytes))
+
+
+def _strip_core(packed: PackedPlan, core: int) -> PackedPlan:
+    return dataclasses.replace(
+        packed,
+        **{
+            f: getattr(packed, f)[core]
+            for f in PackedPlan._ARRAY_FIELDS
+            if not f.startswith("sym_")
+        },
+    )
+
+
+def _emulated_lookup(packed, sidx, n_tables, use_kernels):
+    """Per-core local sweeps + psum + batch-split symmetric fallback."""
+    k = packed.n_cores
+    b = sidx.shape[1]
+    out = jnp.zeros((n_tables, b, E), jnp.float32)
+    for core in range(k):
+        out = out + _local_asym_lookup(
+            _strip_core(packed, core), sidx, n_tables=n_tables,
+            use_kernels=use_kernels,
+        )
+    bl = b // k
+    syms = [
+        _local_sym_lookup(
+            packed, sidx[:, core * bl : (core + 1) * bl],
+            n_tables=n_tables, use_kernels=use_kernels,
+        )
+        for core in range(k)
+    ]
+    return out + jnp.concatenate(syms, axis=1)
+
+
+def _random_indices(wl, seed=10):
+    return [
+        jax.random.randint(
+            jax.random.PRNGKey(seed + i), (wl.batch, t.seq), 0, t.rows
+        )
+        for i, t in enumerate(wl.tables)
+    ]
+
+
+def _check_all_paths(bag, params, idx, atol=1e-5):
+    want = np.asarray(bag.reference(params, idx))
+    sidx = stack_indices(idx, bag.s_max)
+    outs = {}
+    for layout in ("ragged", "dense"):
+        packed = bag.pack(params, layout=layout)
+        for uk in (False, True, "fused"):
+            got = np.asarray(
+                _emulated_lookup(packed, sidx, bag.n_tables, uk)
+            )
+            np.testing.assert_allclose(
+                got, want, rtol=1e-5, atol=atol,
+                err_msg=f"layout={layout} use_kernels={uk}",
+            )
+            outs[(layout, uk)] = got
+    # ragged fused vs old dense path, elementwise
+    np.testing.assert_allclose(
+        outs[("ragged", "fused")], outs[("dense", False)], rtol=1e-5, atol=atol
+    )
+
+
+# --------------------------------------------------------------------------
+# parity across planner shapes
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("planner", ["baseline", "symmetric", "asymmetric"])
+def test_parity_all_planners(planner):
+    """Mixed table sizes, chunking, empty slots, and the symmetric group."""
+    wl = make_workload(
+        "t", [100, 57, 1000, 8, 3000, 16, 450, 333], dim=E,
+        seqs=[1, 2, 1, 4, 1, 1, 3, 1], batch=64,
+    )
+    bag = PartitionedEmbeddingBag(
+        wl, n_cores=4, planner=planner, cost_model=_small_model()
+    )
+    params = bag.init(jax.random.PRNGKey(0))
+    _check_all_paths(bag, params, _random_indices(wl))
+
+
+def test_parity_skewed_one_big_many_small():
+    """The layout's motivating shape: one huge chunk + many tiny tables."""
+    rng = np.random.default_rng(3)
+    rows = [20_000] + [int(x) for x in rng.integers(8, 200, 15)]
+    wl = make_workload("skew", rows, dim=E, batch=32)
+    bag = PartitionedEmbeddingBag(
+        wl, n_cores=4, planner="asymmetric", cost_model=_small_model(1 << 20),
+        planner_kwargs=dict(lif_threshold=1e9, rock_theta=None),
+    )
+    # all tables asymmetric: the skew lives in the slots, not the fallback
+    assert not bag.plan.symmetric_tables
+    params = bag.init(jax.random.PRNGKey(1))
+    _check_all_paths(bag, params, _random_indices(wl))
+
+
+def test_parity_with_replicas():
+    """batch_frac replicas: each replica core serves its contiguous slice."""
+    wl = make_workload("rep", [512, 64, 96], dim=E, batch=32)
+    plan = Plan(
+        workload_name="rep",
+        n_cores=4,
+        assignments=(
+            ChunkAssignment(0, 0, 0, 512, Strategy.GM, batch_frac=(0, 2)),
+            ChunkAssignment(0, 1, 0, 512, Strategy.L1, batch_frac=(1, 2)),
+            ChunkAssignment(1, 2, 0, 64, Strategy.L1_UB),
+            ChunkAssignment(2, 3, 0, 96, Strategy.GM_UB),
+        ),
+        symmetric_tables=(),
+        symmetric_strategies=(),
+    )
+    plan.validate(wl.tables)
+    params = [
+        jax.random.normal(jax.random.PRNGKey(i), (t.rows, E), jnp.float32)
+        for i, t in enumerate(wl.tables)
+    ]
+    want = None
+    sidx = stack_indices(_random_indices(wl), max(t.seq for t in wl.tables))
+    for layout in ("ragged", "dense"):
+        packed = pack_plan(plan, wl.tables, params, layout=layout)
+        for uk in (False, "fused"):
+            got = np.asarray(_emulated_lookup(packed, sidx, 3, uk))
+            if want is None:
+                # oracle: full-batch lookup per table
+                outs = []
+                for i, t in enumerate(params):
+                    g = jnp.take(t, jnp.where(sidx[i] >= 0, sidx[i], 0), axis=0)
+                    g = jnp.where((sidx[i] >= 0)[..., None], g, 0.0)
+                    outs.append(g.sum(axis=1))
+                want = np.asarray(jnp.stack(outs))
+            np.testing.assert_allclose(
+                got, want, rtol=1e-5, atol=1e-5,
+                err_msg=f"layout={layout} use_kernels={uk}",
+            )
+
+
+def test_parity_empty_core():
+    """More cores than chunks: some cores carry zero slots."""
+    wl = make_workload("empty", [40, 24], dim=E, batch=16)
+    bag = PartitionedEmbeddingBag(
+        wl, n_cores=8, planner="asymmetric", cost_model=_small_model(1 << 16),
+        planner_kwargs=dict(rock_theta=None),
+    )
+    params = bag.init(jax.random.PRNGKey(2))
+    _check_all_paths(bag, params, _random_indices(wl))
+
+
+# --------------------------------------------------------------------------
+# layout geometry + packing efficiency
+# --------------------------------------------------------------------------
+
+
+def test_ragged_buffer_invariants():
+    wl = make_workload("inv", [1000, 64, 256, 8], dim=E, batch=16)
+    bag = PartitionedEmbeddingBag(
+        wl, n_cores=2, planner="asymmetric", cost_model=_small_model(1 << 20),
+        planner_kwargs=dict(lif_threshold=1e9, rock_theta=None),
+    )
+    params = bag.init(jax.random.PRNGKey(0))
+    packed = bag.pack(params)
+    assert packed.layout == "ragged"
+    buf = np.asarray(packed.chunk_data)
+    starts = np.asarray(packed.slot_row_start)
+    rows = np.asarray(packed.slot_rows)
+    tables = np.asarray(packed.slot_table)
+    br = packed.block_r
+    assert (buf.shape[1] - 1) % br == 0
+    # shared trailing zero row
+    np.testing.assert_array_equal(buf[:, -1], 0.0)
+    for core in range(packed.n_cores):
+        for s in range(tables.shape[1]):
+            if tables[core, s] < 0:
+                continue
+            assert starts[core, s] % br == 0
+            # chunk data matches the source table slice
+            ti = int(tables[core, s])
+            off = int(np.asarray(packed.slot_offset)[core, s])
+            r = int(rows[core, s])
+            np.testing.assert_array_equal(
+                buf[core, starts[core, s] : starts[core, s] + r],
+                np.asarray(params[ti][off : off + r]),
+            )
+            # the slot's redirect row (right after the data) is zero
+            np.testing.assert_array_equal(
+                buf[core, starts[core, s] + r], 0.0
+            )
+            # per-slot kernel window stays in bounds
+            assert starts[core, s] + packed.slot_window <= buf.shape[1]
+
+
+def test_skewed_pack_shrinks_4x():
+    """Acceptance: 1-big+31-small packs >= 4x smaller than the dense layout."""
+    rng = np.random.default_rng(0)
+    rows = [50_000] + [int(x) for x in rng.integers(16, 256, 31)]
+    wl = make_workload("zipf", rows, dim=E, batch=32)
+    bag = PartitionedEmbeddingBag(
+        wl, n_cores=4, planner="asymmetric", cost_model=analytic_model(),
+        planner_kwargs=dict(lif_threshold=1e9, rock_theta=None),
+    )
+    ragged = bag.pack(None, layout="ragged")
+    meta = bag.layout_summary()
+    assert meta["kind"] == "ragged"
+    dense = bag.pack(None, layout="dense")
+    assert dense.chunk_bytes == meta["dense_bytes"]
+    assert dense.chunk_bytes >= 4 * ragged.chunk_bytes
+    assert bag.layout_summary()["kind"] == "dense"  # last pack wins
+    # and the fused kernel still matches the oracle on this shape
+    params = bag.init(jax.random.PRNGKey(0))
+    packed = bag.pack(params, layout="ragged")
+    sidx = stack_indices(_random_indices(wl), bag.s_max)
+    got = np.asarray(_emulated_lookup(packed, sidx, bag.n_tables, "fused"))
+    want = np.asarray(bag.reference(params, _random_indices(wl)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_layout_meta_recorded():
+    wl = make_workload("meta", [100, 200], dim=E, batch=16)
+    bag = PartitionedEmbeddingBag(
+        wl, n_cores=2, planner="asymmetric", cost_model=_small_model()
+    )
+    bag.pack(None)
+    meta = bag.layout_summary()
+    assert meta["kind"] == "ragged"
+    assert meta["chunk_bytes"] > 0 and meta["dense_bytes"] > 0
+    assert 0.0 <= meta["padding_frac"] < 1.0
+    assert meta["block_r"] % 8 == 0
