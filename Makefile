@@ -1,0 +1,25 @@
+# Tier-1 flow: tests + benchmark regression gate.
+#
+#   make test         — the repo's tier-1 pytest suite
+#   make bench-check  — regenerate the layout bench and diff it against the
+#                       committed BENCH_embedding_layout.json (>20% wall-time
+#                       or bytes regression fails)
+#   make tier1        — both
+#   make bench        — regenerate BENCH_embedding_layout.json in place
+
+PY ?= python
+export PYTHONPATH := src
+
+.PHONY: test bench-check bench tier1
+
+test:
+	$(PY) -m pytest -x -q
+
+bench-check:
+	$(PY) benchmarks/check_regression.py
+
+bench:
+	$(PY) -c "import sys; sys.path.insert(0, '.'); \
+	from benchmarks.kernelbench import layout_scenario; layout_scenario()"
+
+tier1: test bench-check

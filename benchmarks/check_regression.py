@@ -1,0 +1,142 @@
+"""Benchmark regression gate: diff a fresh bench JSON against the committed one.
+
+    PYTHONPATH=src python benchmarks/check_regression.py            # regenerate + diff
+    PYTHONPATH=src python benchmarks/check_regression.py --candidate new.json
+
+Fails (exit 1) when the candidate regresses the committed
+``BENCH_embedding_layout.json`` by more than the tolerance on any gated
+metric:
+
+* **bytes** (packed chunk bytes, modeled HBM traffic) — deterministic,
+  gated at ``--bytes-tol`` (default 20%);
+* **wall time** (``xla_us`` / ``fused*_us``) — measured, gated at
+  ``--wall-tol`` (default 20%) when the timings are compiled (TPU), and at
+  the loose ``--wall-tol-interpret`` (default 100%) otherwise: interpret
+  wall clocks are rank-only and load-noisy, so on CPU they only catch
+  catastrophic regressions while the byte/traffic columns carry the hard
+  gate.  Wall is compared only when both sides ran the same backend +
+  compile mode.
+
+Wired into ``make bench-check`` (the tier-1 flow's companion target).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+from pathlib import Path
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+_BASELINE = _REPO_ROOT / "BENCH_embedding_layout.json"
+
+_BYTES_KEYS = ("chunk_bytes",)
+_TRAFFIC_PATHS = ("fused", "xla_gather")
+_WALL_SUFFIX = "_us"
+
+
+def _flat_metrics(record: dict) -> dict[str, float]:
+    """layout-scenario record -> {metric_name: value} for gated metrics."""
+    out: dict[str, float] = {}
+    for layout, entry in record.get("layouts", {}).items():
+        for k in _BYTES_KEYS:
+            if k in entry:
+                out[f"{layout}.{k}"] = float(entry[k])
+        for path in _TRAFFIC_PATHS:
+            total = (
+                entry.get("modeled_traffic", {})
+                .get("paths", {})
+                .get(path, {})
+                .get("total")
+            )
+            if total is not None:
+                out[f"{layout}.traffic.{path}"] = float(total)
+        for k, v in entry.items():
+            if k.endswith(_WALL_SUFFIX) and isinstance(v, (int, float)):
+                out[f"{layout}.{k}"] = float(v)
+    return out
+
+
+def compare(
+    baseline: dict,
+    candidate: dict,
+    *,
+    bytes_tol: float = 0.20,
+    wall_tol: float = 0.20,
+    wall_tol_interpret: float = 1.00,
+) -> list[str]:
+    """Return a list of human-readable regression messages (empty = pass)."""
+    failures: list[str] = []
+    comparable_wall = baseline.get("backend") == candidate.get(
+        "backend"
+    ) and baseline.get("fused_compiled") == candidate.get("fused_compiled")
+    compiled = bool(baseline.get("fused_compiled"))
+    base = _flat_metrics(baseline)
+    cand = _flat_metrics(candidate)
+    for name, b in sorted(base.items()):
+        is_wall = name.endswith(_WALL_SUFFIX)
+        if is_wall and not comparable_wall:
+            # a different backend/compile mode also renames the wall columns
+            # (fused_us vs fused_interpret_us) — neither is comparable.
+            continue
+        c = cand.get(name)
+        if c is None:
+            failures.append(f"{name}: missing from candidate (was {b:.0f})")
+            continue
+        tol = (
+            (wall_tol if compiled else wall_tol_interpret)
+            if is_wall
+            else bytes_tol
+        )
+        if b > 0 and c > b * (1.0 + tol):
+            failures.append(
+                f"{name}: {c:.0f} vs baseline {b:.0f} "
+                f"(+{(c / b - 1) * 100:.1f}% > {tol * 100:.0f}% tol)"
+            )
+    return failures
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--baseline", type=Path, default=_BASELINE)
+    p.add_argument(
+        "--candidate", type=Path, default=None,
+        help="bench JSON to check; omitted = regenerate via layout_scenario",
+    )
+    p.add_argument("--bytes-tol", type=float, default=0.20)
+    p.add_argument("--wall-tol", type=float, default=0.20)
+    p.add_argument("--wall-tol-interpret", type=float, default=1.00)
+    args = p.parse_args(argv)
+
+    baseline = json.loads(args.baseline.read_text())
+    if args.candidate is not None:
+        candidate = json.loads(args.candidate.read_text())
+    else:
+        sys.path.insert(0, str(_REPO_ROOT))
+        from benchmarks.kernelbench import layout_scenario
+
+        tmp = Path(tempfile.mkstemp(suffix=".json")[1])
+        candidate = layout_scenario(csv=False, out_path=tmp)
+        print(f"[bench-check] regenerated candidate -> {tmp}")
+
+    failures = compare(
+        baseline, candidate, bytes_tol=args.bytes_tol,
+        wall_tol=args.wall_tol, wall_tol_interpret=args.wall_tol_interpret,
+    )
+    base = _flat_metrics(baseline)
+    cand = _flat_metrics(candidate)
+    for name in sorted(base):
+        if name in cand and base[name] > 0:
+            delta = (cand[name] / base[name] - 1) * 100
+            print(f"[bench-check] {name}: {cand[name]:.0f} ({delta:+.1f}%)")
+    if failures:
+        print(f"[bench-check] FAIL — {len(failures)} regression(s):")
+        for f in failures:
+            print(f"[bench-check]   {f}")
+        return 1
+    print("[bench-check] PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

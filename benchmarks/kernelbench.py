@@ -1,16 +1,19 @@
 """Kernel-level strategy + layout comparison (CPU wall-clock).
 
 Measures the XLA-gather reference vs the four Pallas strategies in interpret
-mode (correctness path) and the partitioned executor's XLA path.  On CPU the
-interpret-mode numbers are NOT performance-representative of TPU — the
-roofline/dry-run artifacts carry the TPU story — but this harness (a) proves
-the code paths run, (b) gives the ref-vs-ref speed baseline used in examples,
-and (c) is the hook real-TPU runs would use unchanged.
+mode (correctness path) and the partitioned executor's paths.  Off-TPU the
+Pallas numbers run in interpret mode and are labelled ``*_interpret_us`` —
+NOT performance-representative; on a TPU backend the same harness times the
+compiled kernels and labels them ``*_us``.  Because interpret wall-clock says
+nothing about data movement, every path also gets a **modeled HBM-traffic
+column** (``repro.core.traffic``), which is what actually separates the
+layouts/executors on hardware: the schedule-driven fused kernel streams each
+buffer window once per core, the retired per-slot scan paid O(S·R_max·E).
 
 ``layout_scenario`` is the ragged-vs-dense packed-layout comparison on a
-Zipf-skewed 1-big+31-small workload (DESIGN.md §"Ragged packed layout"):
-pack bytes, padding fraction, and executor wall time for both layouts, written
-to ``BENCH_embedding_layout.json``.
+Zipf-skewed 1-big+31-small workload (DESIGN.md §3–§4): pack bytes, padding
+fraction, modeled traffic, autotuned block sizes, and executor wall time for
+both layouts, written to ``BENCH_embedding_layout.json``.
 """
 from __future__ import annotations
 
@@ -23,7 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compat
-from repro.core import PartitionedEmbeddingBag, analytic_model, make_workload
+from repro.core import (
+    PartitionedEmbeddingBag,
+    analytic_model,
+    make_workload,
+    modeled_hbm_traffic,
+)
 from repro.core.strategies import Strategy
 from repro.kernels import ops, ref
 
@@ -48,12 +56,14 @@ def run(csv: bool = True):
     ref_fn = jax.jit(lambda t, i: ref.embedding_bag_ref(t, i))
     us = _time(ref_fn, table, idx)
     rows.append(("xla_gather_ref", us))
+    interp = jax.default_backend() != "tpu"
+    tag = "_interpret" if interp else ""
     for strat in Strategy:
         fn = jax.jit(
-            lambda t, i, st=strat: ops.embedding_bag(t, i, st, interpret=True)
+            lambda t, i, st=strat: ops.embedding_bag(t, i, st, interpret=interp)
         )
         us = _time(fn, table, idx, iters=2)
-        rows.append((f"pallas_{strat.value}_interpret", us))
+        rows.append((f"pallas_{strat.value}{tag}", us))
     if csv:
         for name, us in rows:
             print(f"kernelbench,{name},{us:.1f}us_per_call,m={m}xE={e}xB={b}xs={s}")
@@ -68,12 +78,16 @@ def zipf_skewed_workload(big_rows: int = 50_000, n_small: int = 31, batch: int =
 
 
 def layout_scenario(csv: bool = True, out_path: Path | None = None) -> dict:
-    """Ragged vs dense packed layout: bytes + executor wall time.
+    """Ragged vs dense packed layout: bytes + modeled traffic + wall time.
 
     The asymmetric plan keeps every table asymmetric (high LIF threshold), so
     one core carries the huge chunk while others carry handfuls of tiny
     tables — exactly the shape where the dense stacked-slot layout pads every
-    slot to the global max_rows.
+    slot to the global max_rows.  The fused kernel is timed COMPILED on a TPU
+    backend (``fused_us``); off-TPU it falls back to interpret mode and the
+    column is labelled ``fused_interpret_us`` so nobody mistakes it for a
+    hardware number — the modeled-traffic columns carry the layout story on
+    CPU.
     """
     wl = zipf_skewed_workload()
     n_dev = jax.device_count()
@@ -88,38 +102,69 @@ def layout_scenario(csv: bool = True, out_path: Path | None = None) -> dict:
         jnp.asarray(rng.integers(0, t.rows, (wl.batch, t.seq)), jnp.int32)
         for t in wl.tables
     ]
+    compiled = jax.default_backend() == "tpu"
+    fused_key = "fused_us" if compiled else "fused_interpret_us"
 
     record: dict = {
         "workload": "zipf-skew-1big-31small",
         "batch": wl.batch,
         "n_tables": len(wl.tables),
         "n_cores": n_dev,
+        "backend": jax.default_backend(),
+        "fused_compiled": compiled,
         "layouts": {},
     }
     for layout in ("ragged", "dense"):
-        packed = bag.pack(params, layout=layout)
+        # the ragged layout gets the autotuned block sizes (the sweep is
+        # recorded in plan.meta["tuning"] and copied into the record).
+        packed = bag.pack(params, layout=layout, autotune=layout == "ragged")
         summary = bag.layout_summary()
+        traffic = modeled_hbm_traffic(
+            packed, batch=wl.batch, seq=bag.s_max, n_tables=bag.n_tables
+        )
         timings = {}
-        for mode, uk in (("xla", False), ("fused_interpret", "fused")):
+        for mode, uk in (("xla", False), (fused_key[:-3], "fused")):
             fn = jax.jit(
-                lambda p, i, uk=uk: bag.apply(p, i, mesh=mesh, use_kernels=uk)
+                lambda p, i, uk=uk: bag.apply(
+                    p, i, mesh=mesh, use_kernels=uk, reduce_mode="sparse"
+                )
             )
             timings[f"{mode}_us"] = _time(fn, packed, idx, iters=2)
-        record["layouts"][layout] = {**summary, **timings}
+        entry = {**summary, **timings, "modeled_traffic": traffic}
+        if layout == "ragged":
+            entry["tuning"] = bag.plan.meta.get("tuning", {})
+        record["layouts"][layout] = entry
         if csv:
+            tp = traffic["paths"]
             print(
                 f"kernelbench,layout_{layout},"
                 f"bytes={summary['chunk_bytes']},"
                 f"padding_frac={summary['padding_frac']:.3f},"
                 f"xla={timings['xla_us']:.0f}us,"
-                f"fused={timings['fused_interpret_us']:.0f}us"
+                f"fused={timings[f'{fused_key[:-3]}_us']:.0f}us"
+                f"{'' if compiled else '(interpret)'},"
+                f"model_fused_MB={tp['fused']['total'] / 1e6:.2f},"
+                f"model_scan_MB={tp['per_slot_scan_legacy']['total'] / 1e6:.2f}"
             )
     r = record["layouts"]
     record["bytes_shrink_vs_dense"] = (
         r["dense"]["chunk_bytes"] / max(r["ragged"]["chunk_bytes"], 1)
     )
+    record["modeled_fused_traffic_shrink_vs_dense"] = (
+        r["dense"]["modeled_traffic"]["paths"]["fused"]["total"]
+        / max(r["ragged"]["modeled_traffic"]["paths"]["fused"]["total"], 1)
+    )
+    record["modeled_fused_traffic_shrink_vs_scan"] = (
+        r["ragged"]["modeled_traffic"]["paths"]["per_slot_scan_legacy"]["total"]
+        / max(r["ragged"]["modeled_traffic"]["paths"]["fused"]["total"], 1)
+    )
     if csv:
         print(f"kernelbench,layout_shrink,{record['bytes_shrink_vs_dense']:.2f}x")
+        print(
+            "kernelbench,traffic_shrink,"
+            f"vs_dense={record['modeled_fused_traffic_shrink_vs_dense']:.2f}x,"
+            f"vs_scan={record['modeled_fused_traffic_shrink_vs_scan']:.2f}x"
+        )
     out_path = out_path or _REPO_ROOT / "BENCH_embedding_layout.json"
     out_path.write_text(json.dumps(record, indent=2))
     return record

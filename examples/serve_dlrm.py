@@ -44,7 +44,12 @@ def main():
 
         @jax.jit
         def infer(dense, indices):
-            return forward_packed(cfg, bag, packed, params, {"dense": dense, "indices": indices}, mesh=mesh)
+            # the new executor defaults: schedule-driven fused streaming
+            # kernel + owner-sharded sparse rejoin.
+            return forward_packed(cfg, bag, packed, params,
+                                  {"dense": dense, "indices": indices},
+                                  mesh=mesh, use_kernels="fused",
+                                  reduce_mode="sparse")
 
         def step(payloads):
             dense = jax.numpy.stack([p["dense"] for p in payloads])
@@ -52,7 +57,9 @@ def main():
             return jax.block_until_ready(infer(dense, idx))
 
         srv = Server(step, max_batch=args.batch, max_wait_s=0.001,
-                     layout=bag.layout_summary())
+                     layout=bag.layout_summary(),
+                     exec_mode={"use_kernels": "fused",
+                                "reduce_mode": "sparse"})
         rng = np.random.default_rng(0)
         for dist in ("uniform", "real", "fixed"):
             for i in range(args.queries // args.batch):

@@ -9,6 +9,7 @@ from repro.core.cost_model import (
     HardwareSpec,
     analytic_model,
 )
+from repro.core.autotune import autotune_block_sizes
 from repro.core.embedding import PartitionedEmbeddingBag, stack_indices
 from repro.core.partition import (
     PackedPlan,
@@ -16,6 +17,7 @@ from repro.core.partition import (
     partitioned_lookup,
     vocab_parallel_embed,
 )
+from repro.core.traffic import modeled_hbm_traffic
 from repro.core.planner import (
     PLANNERS,
     plan_asymmetric,
@@ -42,7 +44,9 @@ __all__ = [
     "TableSpec",
     "Workload",
     "analytic_model",
+    "autotune_block_sizes",
     "make_workload",
+    "modeled_hbm_traffic",
     "pack_plan",
     "partitioned_lookup",
     "plan_asymmetric",

@@ -1,0 +1,105 @@
+"""Compiled-sweep autotuner for the fused streaming kernel's block sizes.
+
+``block_r`` trades step count against chunk padding: a large row block means
+fewer (bigger) streaming DMAs but pads every small chunk up to the block,
+while a small block keeps padding tight at the cost of more grid steps.
+``block_b`` caps the resident batch tile (0/None = fold the whole padded
+batch into the one-hot matmul when it fits the VMEM budget).
+
+:func:`autotune_block_sizes` packs the plan abstractly at each candidate,
+executes the fused lookup on the heaviest core with synthetic indices, and
+records the full sweep in ``plan.meta["tuning"]`` — so a packed plan carries
+the evidence for its own block sizes.  On TPU the sweep times compiled
+kernels; off-TPU it times interpret mode (flagged in the record), which still
+ranks candidates by step count / padding but is not wall-representative.
+"""
+from __future__ import annotations
+
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.partition import (
+    PackedPlan,
+    _fused_asym_lookup,
+    pack_plan,
+)
+from repro.core.strategies import Plan
+from repro.core.tables import TableSpec
+
+_BLOCK_R_CANDIDATES = (64, 128, 256, 512)
+
+
+def _heaviest_core(packed: PackedPlan) -> int:
+    """Core with the most real schedule steps (the executor's critical path)."""
+    step_slot = np.asarray(packed.step_slot)
+    n_slots = np.asarray(packed.slot_table).shape[1]
+    real = (step_slot < n_slots).sum(axis=1)
+    return int(real.argmax())
+
+
+def autotune_block_sizes(
+    plan: Plan,
+    tables: Sequence[TableSpec],
+    *,
+    batch: int,
+    block_r_candidates: Sequence[int] = _BLOCK_R_CANDIDATES,
+    block_b_candidates: Sequence[int | None] = (None,),
+    iters: int = 2,
+    seed: int = 0,
+) -> dict:
+    """Sweep (block_r, block_b), record ``plan.meta["tuning"]``, return best.
+
+    Returns ``{"block_r": int, "block_b": int | None}`` — feed straight into
+    :func:`repro.core.partition.pack_plan`.
+    """
+    if not plan.assignments:
+        plan.meta["tuning"] = {"candidates": [], "best": None}
+        return {"block_r": None, "block_b": None}
+    s_max = max(t.seq for t in tables)
+    rng = np.random.default_rng(seed)
+    idx = np.full((len(tables), batch, s_max), -1, np.int32)
+    for i, t in enumerate(tables):
+        idx[i, :, : t.seq] = rng.integers(0, t.rows, (batch, t.seq))
+    idx = jnp.asarray(idx)
+
+    backend = jax.default_backend()
+    candidates = []
+    for br in dict.fromkeys(int(c) for c in block_r_candidates):
+        for bb in dict.fromkeys(block_b_candidates):
+            packed = pack_plan(plan, tables, None, block_r=br, block_b=bb)
+            local = packed.strip_core(_heaviest_core(packed))
+            fn = jax.jit(
+                lambda p, i: _fused_asym_lookup(p, i, n_tables=len(tables))
+            )
+            jax.block_until_ready(fn(local, idx))  # compile/warm
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(fn(local, idx))
+            wall_us = (time.perf_counter() - t0) / iters * 1e6
+            lay = plan.meta["layout"]
+            candidates.append(
+                {
+                    "block_r": br,
+                    "block_b": 0 if bb is None else int(bb),
+                    "n_steps": lay["n_steps"],
+                    "padding_frac": lay["padding_frac"],
+                    "chunk_bytes": lay["chunk_bytes"],
+                    "wall_us": wall_us,
+                }
+            )
+    best = min(candidates, key=lambda c: c["wall_us"])
+    plan.meta["tuning"] = {
+        "candidates": candidates,
+        "best": dict(best),
+        "backend": backend,
+        "compiled": backend == "tpu",
+        "iters": iters,
+    }
+    return {
+        "block_r": best["block_r"],
+        "block_b": best["block_b"] or None,
+    }

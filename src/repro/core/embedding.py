@@ -68,14 +68,32 @@ class PartitionedEmbeddingBag:
         ]
 
     def pack(
-        self, table_data: Sequence[jax.Array] | None, *, layout: str | None = None
+        self,
+        table_data: Sequence[jax.Array] | None,
+        *,
+        layout: str | None = None,
+        block_r: int | None = None,
+        block_b: int | None = None,
+        autotune: bool = False,
     ) -> PackedPlan:
+        """Materialize the plan.  ``autotune=True`` sweeps the fused kernel's
+        ``block_r``/``block_b`` first (recorded in ``plan.meta["tuning"]``)."""
+        layout = layout or self.layout
+        if autotune and layout == "ragged" and block_r is None:
+            from repro.core.autotune import autotune_block_sizes
+
+            best = autotune_block_sizes(
+                self.plan, self.workload.tables, batch=self.workload.batch
+            )
+            block_r, block_b = best["block_r"], block_b or best["block_b"]
         return pack_plan(
             self.plan,
             self.workload.tables,
             table_data,
             dtype=self.dtype,
-            layout=layout or self.layout,
+            layout=layout,
+            block_r=block_r,
+            block_b=block_b,
         )
 
     def layout_summary(self) -> dict:
@@ -92,8 +110,8 @@ class PartitionedEmbeddingBag:
         mesh: jax.sharding.Mesh,
         axis: str = "model",
         batch_axes: tuple[str, ...] = (),
-        use_kernels: bool = False,
-        reduce_mode: str = "psum",
+        use_kernels="fused",
+        reduce_mode: str = "sparse",
     ) -> jax.Array:
         if isinstance(indices, (list, tuple)):
             indices = stack_indices(indices, self.s_max)

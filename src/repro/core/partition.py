@@ -3,7 +3,7 @@
 The paper places table *chunks* in individual cores' L1 buffers, subtracts the
 chunk offset from the indices, clips them to avoid out-of-bounds accesses, and
 combines partial pools with atomic inter-core accumulation.  The TPU-native
-rendering (DESIGN.md §2, §"Ragged packed layout"):
+rendering (DESIGN.md §3–§4, the single-pass streaming executor):
 
 * the per-core chunk inventory is materialized as a *ragged packed buffer*
   ``(K, R_total+1, E)`` sharded over the ``"model"`` mesh axis — every device
@@ -12,27 +12,36 @@ rendering (DESIGN.md §2, §"Ragged packed layout"):
   layout.  Memory is ``K·(ΣR_i)·E`` instead of the dense stacked-slot layout's
   ``K·S·R_max·E`` (the dense layout is kept as ``layout="dense"`` for
   comparison benchmarks);
-* each device loops (``lax.scan``) over its slots, performing the
-  offset-subtract / clip / zero-row-redirect lookup with the slot's assigned
-  data-flow strategy (``lax.switch`` over the four Pallas kernels), or runs
-  ONE fused multi-slot pallas_call over a precomputed (slot, row-block)
-  step schedule (``use_kernels="fused"``);
-* "atomic inter-core accumulation" is a single ``lax.psum`` over the axis
-  (or a ring reduce-scatter in the overlapped §Perf variant);
+* pack time emits a per-strategy **step schedule** (``step_slot``/
+  ``step_base``/``step_block``/``step_strategy``): one step per ``block_r``
+  rows of each chunk, grouped by the slot's data-flow strategy.  The default
+  executor (``use_kernels="fused"``) runs ONE streaming ``pallas_call`` over
+  that schedule — strategy is a per-step dispatch inside the kernel, and
+  each buffer window is DMA'd HBM→VMEM once per core
+  (``kernels/embedding_multi.py``).  The legacy per-slot ``lax.scan`` over
+  max-alloc windows is retired (``use_kernels=True`` warns and routes here);
+* inter-core accumulation is **owner-sharded** by default
+  (``reduce_mode="sparse"``): each asymmetric table has one owner core; cores
+  exchange only the owned-slot partial rows they actually hold
+  (``lax.all_to_all``), owners sum them, and an ``all_gather`` of the owned
+  buckets rebuilds the replicated output — collective volume is proportional
+  to the placed slots, not K·N·B·E.  ``reduce_mode="psum"`` (the paper's
+  atomic accumulation) and ``"ring"`` are kept;
 * the LIF symmetric fallback group executes batch-split over the same axis and
   rejoins with an ``all_gather``.
 
 Each chunk's region in the ragged buffer is padded to a ``block_r`` multiple
 with at least one zero row after the data, and the buffer carries one shared
 trailing zero row; all invalid lookups (out-of-chunk, sequence padding ``-1``,
-empty slots, other replicas' batch rows) are redirected to a zero row, so no
-post-hoc masking of the pooled result is needed and the pooling can stay
-fused in the kernels.
+empty slots, other replicas' batch rows) are redirected to a zero row (XLA
+path) or contribute exact zeros in-kernel (fused path), so no post-hoc
+masking of the pooled result is needed.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Sequence
 
 import jax
@@ -63,13 +72,18 @@ _RAGGED_BLOCK_R_MIN = 64  # floor: bounds step count; wastes < 64 rows/chunk
 @dataclasses.dataclass
 class PackedPlan:
     """Array-ified Plan. ``chunk_data``/slot metadata are sharded over the
-    core axis; symmetric tables are replicated (small by construction).
+    core axis; symmetric tables and the rejoin maps are replicated (small by
+    construction).
 
     ``layout="ragged"`` (default): ``chunk_data`` is ``(K, R_total+1, E)``
     with each core's chunks concatenated row-wise (``slot_row_start`` gives
     each slot's first row) and the ``step_*`` arrays hold the fused kernel's
-    per-core (slot, row-block) schedule.  ``layout="dense"`` keeps the legacy
-    stacked-slot ``(K, S, R_max+1, E)`` form (no ``step_*`` schedule).
+    per-core (slot, row-block, strategy) schedule.  ``layout="dense"`` keeps
+    the legacy stacked-slot ``(K, S, R_max+1, E)`` form (no ``step_*``
+    schedule).  The ``rejoin_*`` maps drive the owner-sharded sparse rejoin:
+    ``rejoin_send[c, d]`` lists the tables core ``c`` sends to owner ``d``,
+    ``rejoin_bucket[d]`` lists the tables core ``d`` owns, and
+    ``rejoin_owned_pos[t]`` is table ``t``'s position in its owner's bucket.
     """
 
     # asymmetric slots
@@ -85,6 +99,11 @@ class PackedPlan:
     step_slot: Any  # (K, T) int32 slot id per step (S = trash slot)
     step_base: Any  # (K, T) int32 chunk-local first row of the step's block
     step_block: Any  # (K, T) int32 row-block index into the ragged buffer
+    step_strategy: Any  # (K, T) int32 strategy code of the step's slot
+    # owner-sharded sparse rejoin maps (replicated)
+    rejoin_send: Any  # (K, K, n_send) int32 table ids, -1 = none
+    rejoin_owned_pos: Any  # (N,) int32 bucket position at the owner, -1
+    rejoin_bucket: Any  # (K, O) int32 owned table ids, -1 pad
     # symmetric fallback group (replicated)
     sym_data: Any  # (Nsym, Msym+1, E)
     sym_table: Any  # (Nsym,) int32
@@ -93,23 +112,42 @@ class PackedPlan:
     # static layout descriptors (pytree aux data)
     layout: str = "ragged"
     block_r: int = 0  # fused-kernel row-block size (ragged)
-    slot_window: int = 0  # per-slot kernel window rows (ragged)
+    slot_window: int = 0  # largest per-slot block_r allocation (informational)
+    block_b: int = 0  # fused-kernel resident batch rows; 0 = auto
 
     _ARRAY_FIELDS = (
         "chunk_data", "slot_table", "slot_offset", "slot_rows",
         "slot_row_start", "slot_strategy", "slot_rep", "slot_nrep",
-        "step_slot", "step_base", "step_block",
+        "step_slot", "step_base", "step_block", "step_strategy",
+        "rejoin_send", "rejoin_owned_pos", "rejoin_bucket",
+        "sym_data", "sym_table", "sym_rows", "sym_strategy",
+    )
+    # replicated across the core axis (everything else is core-sharded)
+    _REPLICATED_FIELDS = (
+        "rejoin_send", "rejoin_owned_pos", "rejoin_bucket",
         "sym_data", "sym_table", "sym_rows", "sym_strategy",
     )
 
     def tree_flatten(self):
         children = tuple(getattr(self, f) for f in self._ARRAY_FIELDS)
-        aux = (self.layout, self.block_r, self.slot_window)
+        aux = (self.layout, self.block_r, self.slot_window, self.block_b)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
+
+    def strip_core(self, core) -> "PackedPlan":
+        """Select one core's slice of every core-sharded field (replicated
+        fields pass through) — the view each shard_map program executes on."""
+        return dataclasses.replace(
+            self,
+            **{
+                f: getattr(self, f)[core]
+                for f in self._ARRAY_FIELDS
+                if f not in self._REPLICATED_FIELDS
+            },
+        )
 
     @property
     def n_cores(self) -> int:
@@ -124,6 +162,48 @@ def _align(n: int, mult: int) -> int:
     return int(-(-n // mult) * mult)
 
 
+def _rejoin_maps(
+    plan: Plan, n_tables: int, k: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Owner-sharded rejoin maps: (owner, bucket_table, owned_pos, send_table).
+
+    Each asymmetric table is owned by the core holding most of its rows (ties
+    break to the lowest core id); ``send_table[c, d]`` lists the tables core
+    ``c`` holds partials for that core ``d`` owns (deduplicated — a core
+    pre-sums all its slots of one table before sending).
+    """
+    rows_by: dict[tuple[int, int], int] = {}
+    for a in plan.assignments:
+        key = (a.table_idx, a.core)
+        rows_by[key] = rows_by.get(key, 0) + a.rows
+    owner = -np.ones(n_tables, np.int32)
+    for ti in {a.table_idx for a in plan.assignments}:
+        cores = [c for (t, c) in rows_by if t == ti]
+        owner[ti] = min(cores, key=lambda c: (-rows_by[(ti, c)], c))
+    owned: dict[int, list[int]] = {c: [] for c in range(k)}
+    for ti in range(n_tables):
+        if owner[ti] >= 0:
+            owned[int(owner[ti])].append(ti)
+    o_max = max(1, max((len(v) for v in owned.values()), default=0))
+    bucket = -np.ones((k, o_max), np.int32)
+    owned_pos = -np.ones(n_tables, np.int32)
+    for c, lst in owned.items():
+        for p, ti in enumerate(lst):
+            bucket[c, p] = ti
+            owned_pos[ti] = p
+    send_sets: dict[tuple[int, int], set[int]] = {}
+    for a in plan.assignments:
+        send_sets.setdefault((a.core, int(owner[a.table_idx])), set()).add(
+            a.table_idx
+        )
+    n_send = max([1] + [len(v) for v in send_sets.values()])
+    send = -np.ones((k, k, n_send), np.int32)
+    for (c, d), tis in send_sets.items():
+        for q, ti in enumerate(sorted(tis)):
+            send[c, d, q] = ti
+    return owner, bucket, owned_pos, send
+
+
 def pack_plan(
     plan: Plan,
     tables: Sequence[TableSpec],
@@ -132,6 +212,7 @@ def pack_plan(
     dtype=jnp.float32,
     layout: str = "ragged",
     block_r: int | None = None,
+    block_b: int | None = None,
 ) -> PackedPlan:
     """Materialize a Plan into the packed executor layout.
 
@@ -140,7 +221,9 @@ def pack_plan(
 
     ``layout="ragged"`` concatenates each core's chunks row-wise (the memory-
     proportional layout); ``layout="dense"`` pads every slot to the global
-    ``max_rows`` (the legacy layout, kept for comparison).  A ``layout``
+    ``max_rows`` (the legacy layout, kept for comparison).  ``block_r`` /
+    ``block_b`` override the fused kernel's row-block / resident-batch sizes
+    (see :mod:`repro.core.autotune` for the tuned pick).  A ``layout``
     summary (bytes, padding fraction) is recorded in ``plan.meta`` either way.
     """
     if layout not in ("ragged", "dense"):
@@ -201,56 +284,59 @@ def pack_plan(
         step_slot = np.zeros((k, 0), np.int32)
         step_base = np.zeros((k, 0), np.int32)
         step_block = np.zeros((k, 0), np.int32)
+        step_strategy = np.zeros((k, 0), np.int32)
         br = 0
         slot_window = 0
+        n_pad_steps = 0
     else:
         # ragged: per core, concatenate chunks row-wise; each chunk's region
         # is padded to a block_r multiple (>= 1 zero row after the data, the
         # slot's redirect target), so the fused kernel's row-blocks tile it.
         # block_r is sized off the SMALLEST real chunk: the quantum bounds
         # each chunk's padding, while big chunks just take more steps (cheap:
-        # the steps are the streaming DMAs the kernel does anyway).  Packing
-        # each core's largest chunk last makes the per-slot kernel window
-        # [row_start, row_start+slot_window) end exactly at the core total —
-        # no window tail padding.
+        # the steps are the streaming DMAs the kernel does anyway).
         min_rows = min((a.rows for a in plan.assignments), default=1)
         br = block_r or min(
             _RAGGED_BLOCK_R,
             max(_align(min_rows + 1, _ROW_PAD), _RAGGED_BLOCK_R_MIN),
         )
         br = max(_align(br, _ROW_PAD), _ROW_PAD)
+        # per-strategy step schedule: slots grouped by strategy code (then
+        # ascending size) so every strategy's steps form one contiguous run —
+        # L1-resident, GM-streamed, and UB one-hot slots all execute from the
+        # same (slot, row-block) schedule and the kernel dispatches per step.
         core_order: dict[int, list[int]] = {
             core: sorted(
                 range(len(per_core.get(core, []))),
-                key=lambda s_i: per_core[core][s_i].rows,
+                key=lambda s_i: (
+                    STRATEGY_CODE[per_core[core][s_i].strategy],
+                    per_core[core][s_i].rows,
+                    s_i,
+                ),
             )
             for core in range(k)
         }
-        steps: list[list[tuple[int, int, int]]] = []
+        steps: list[list[tuple[int, int, int, int]]] = []
         slot_window = br
         t_needed = br
         for core in range(k):
             cur = 0
-            core_steps: list[tuple[int, int, int]] = []
+            core_steps: list[tuple[int, int, int, int]] = []
             for s_i in core_order[core]:
                 a = per_core[core][s_i]
                 alloc = _align(a.rows + 1, br)
                 slot_row_start[core, s_i] = cur
+                code = STRATEGY_CODE[a.strategy]
                 for j in range(alloc // br):
-                    core_steps.append((s_i, j * br, cur // br + j))
+                    core_steps.append((s_i, j * br, cur // br + j, code))
                 cur += alloc
                 slot_window = max(slot_window, alloc)
             steps.append(core_steps)
             t_needed = max(t_needed, cur)
-        # every per-slot kernel window [row_start, row_start+slot_window) must
-        # stay in bounds; ascending-size packing makes this the core total
-        # except when another core owns the largest chunk.
-        for core in range(k):
-            for s_i in range(max_slots):
-                if slot_table[core, s_i] >= 0:
-                    t_needed = max(
-                        t_needed, int(slot_row_start[core, s_i]) + slot_window
-                    )
+        # NOTE: the retired per-slot scan path used to force every core's
+        # buffer to cover [row_start, row_start + slot_window) for every
+        # slot; the schedule-driven kernel only ever touches real row-blocks,
+        # so the buffer ends at the largest core's own total.
         t_pad = _align(t_needed, br)
 
         buf = np.zeros((k, t_pad + 1, e), jnp.dtype(dtype).name)
@@ -267,14 +353,21 @@ def pack_plan(
         # padding steps target the trash slot (id = max_slots) with base 0,
         # so they init-write zeros into a discarded output block.
         n_steps = max((len(s) for s in steps), default=0)
+        n_pad_steps = sum(n_steps - len(s) for s in steps)
         step_slot = np.full((k, n_steps), max_slots, np.int32)
         step_base = np.zeros((k, n_steps), np.int32)
         step_block = np.zeros((k, n_steps), np.int32)
+        step_strategy = np.zeros((k, n_steps), np.int32)
         for core, core_steps in enumerate(steps):
-            for t, (s_i, base, blk) in enumerate(core_steps):
+            for t, (s_i, base, blk, code) in enumerate(core_steps):
                 step_slot[core, t] = s_i
                 step_base[core, t] = base
                 step_block[core, t] = blk
+                step_strategy[core, t] = code
+
+    owner, rejoin_bucket, rejoin_owned_pos, rejoin_send = _rejoin_maps(
+        plan, len(tables), k
+    )
 
     ragged_bytes = int(np.prod(chunk_arr.shape)) * itemsize
     plan.meta["layout"] = {
@@ -283,11 +376,20 @@ def pack_plan(
         "dense_bytes": dense_bytes,
         "bytes_vs_dense": ragged_bytes / max(dense_bytes, 1),
         "block_r": br,
+        "block_b": int(block_b or 0),
         "slot_window": slot_window,
         "n_steps": int(step_slot.shape[1]),
+        "n_padding_steps": int(n_pad_steps),
         "padding_frac": 1.0
         - sum(a.rows for a in plan.assignments)
         * e * itemsize / max(ragged_bytes, 1),
+    }
+    plan.meta["rejoin"] = {
+        "n_owned_max": int(rejoin_bucket.shape[1]),
+        "n_send_max": int(rejoin_send.shape[2]),
+        "owned_per_core": [
+            int((rejoin_bucket[c] >= 0).sum()) for c in range(k)
+        ],
     }
 
     # symmetric group
@@ -324,6 +426,10 @@ def pack_plan(
         step_slot=jnp.asarray(step_slot),
         step_base=jnp.asarray(step_base),
         step_block=jnp.asarray(step_block),
+        step_strategy=jnp.asarray(step_strategy),
+        rejoin_send=jnp.asarray(rejoin_send),
+        rejoin_owned_pos=jnp.asarray(rejoin_owned_pos),
+        rejoin_bucket=jnp.asarray(rejoin_bucket),
         sym_data=sym_data,
         sym_table=jnp.asarray(sym_table),
         sym_rows=jnp.asarray(sym_rows),
@@ -331,11 +437,12 @@ def pack_plan(
         layout=layout,
         block_r=br,
         slot_window=slot_window,
+        block_b=int(block_b or 0),
     )
 
 
 # --------------------------------------------------------------------------
-# strategy dispatch on one chunk
+# strategy dispatch on one chunk (symmetric group + legacy dense layout)
 # --------------------------------------------------------------------------
 
 
@@ -370,13 +477,15 @@ def _replica_bmask(packed: PackedPlan, b: int) -> jax.Array:
 def _local_asym_lookup(
     packed: PackedPlan, indices: jax.Array, *, n_tables: int, use_kernels
 ) -> jax.Array:
-    """indices (N, B, s) -> local partial (N, B, E) f32 (pre-psum).
+    """indices (N, B, s) -> local partial (N, B, E) f32 (pre-rejoin).
 
-    ``use_kernels``: False = XLA gather; True = per-slot Pallas strategy
-    kernels (lax.switch); "fused" = ONE multi-slot pallas_call for the whole
-    sweep (amortizes the per-table launch overhead the paper measures).
+    ``use_kernels``: False = XLA gather; "fused" = ONE schedule-driven
+    streaming pallas_call for the whole sweep (the default executor).
+    ``True`` is the retired per-slot scan spelling — it routes to the fused
+    path for the ragged layout (no O(S·R_max·E) window is ever allocated)
+    and to the legacy stacked-slot scan for ``layout="dense"``.
     """
-    if use_kernels == "fused":
+    if use_kernels == "fused" or (use_kernels and packed.layout != "dense"):
         return _fused_asym_lookup(packed, indices, n_tables=n_tables)
     if packed.layout == "dense":
         return _dense_asym_lookup(
@@ -386,46 +495,29 @@ def _local_asym_lookup(
     _, b, _ = indices.shape
     buffer = packed.chunk_data  # (T+1, E)
     zrow = buffer.shape[0] - 1  # shared trailing zero row
-    e = buffer.shape[-1]
-    w = packed.slot_window
     bpos = jnp.arange(b, dtype=jnp.int32)
 
     def body(out, xs):
-        ti, off, rows, start, strat, rep, nrep = xs
+        ti, off, rows, start, rep, nrep = xs
         idx = jnp.take(indices, jnp.maximum(ti, 0), axis=0)  # (B, s)
         local = idx - off
         valid = (idx >= 0) & (local >= 0) & (local < rows) & (ti >= 0)
         # replica r of n serves the r-th contiguous batch 1/n-slice.
         bmask = (bpos * nrep) // b == rep
         valid = valid & bmask[:, None]
-        if use_kernels:
-            # per-slot Pallas strategy kernels want a contiguous chunk: slice
-            # the slot's window out of the ragged buffer.  Row ``rows`` of the
-            # window is the slot's own zero row (alloc padding guarantees it).
-            # The scan needs a uniform static shape, so every slot pays the
-            # max-alloc window — the same O(S·R_max·E) traffic as the dense
-            # layout.  The ragged layout's DMA win needs ``use_kernels=
-            # "fused"``, whose row-block schedule streams only real rows.
-            window = lax.dynamic_slice(buffer, (start, 0), (w, e))
-            lidx = jnp.where(valid, local, rows).astype(jnp.int32)
-            pooled = _bag_with_strategy(window, lidx, strat, use_kernels)
-        else:
-            gidx = jnp.where(valid, start + local, zrow).astype(jnp.int32)
-            pooled = (
-                jnp.take(buffer, gidx, axis=0).astype(jnp.float32).sum(axis=1)
-            )
+        gidx = jnp.where(valid, start + local, zrow).astype(jnp.int32)
+        pooled = jnp.take(buffer, gidx, axis=0).astype(jnp.float32).sum(axis=1)
         out = out.at[jnp.maximum(ti, 0)].add(
             jnp.where(ti >= 0, pooled, jnp.zeros_like(pooled))
         )
         return out, None
 
-    out0 = jnp.zeros((n_tables, b, e), jnp.float32)
+    out0 = jnp.zeros((n_tables, b, buffer.shape[-1]), jnp.float32)
     xs = (
         packed.slot_table,
         packed.slot_offset,
         packed.slot_rows,
         packed.slot_row_start,
-        packed.slot_strategy,
         packed.slot_rep,
         packed.slot_nrep,
     )
@@ -471,7 +563,7 @@ def _dense_asym_lookup(
 
 
 def _local_sym_lookup(
-    packed: PackedPlan, idx_slice: jax.Array, *, n_tables: int, use_kernels: bool
+    packed: PackedPlan, idx_slice: jax.Array, *, n_tables: int, use_kernels
 ) -> jax.Array:
     """Symmetric fallback: idx_slice (N, B/K, s) -> (N, B/K, E) f32."""
     n_sym = packed.sym_data.shape[0]
@@ -487,7 +579,7 @@ def _local_sym_lookup(
         idx = jnp.take(idx_slice, ti, axis=0)
         valid = (idx >= 0) & (idx < rows)
         lidx = jnp.where(valid, idx, rpad).astype(jnp.int32)
-        pooled = _bag_with_strategy(tbl, lidx, strat, use_kernels)
+        pooled = _bag_with_strategy(tbl, lidx, strat, bool(use_kernels))
         return out.at[ti].add(pooled), None
 
     xs = (packed.sym_data, packed.sym_table, packed.sym_rows, packed.sym_strategy)
@@ -498,7 +590,7 @@ def _local_sym_lookup(
 def _fused_asym_lookup(
     packed: PackedPlan, indices: jax.Array, *, n_tables: int
 ) -> jax.Array:
-    """One fused pallas_call for all slots (kernels/embedding_multi.py)."""
+    """One schedule-driven pallas_call for all slots (kernels/embedding_multi)."""
     from repro.kernels.embedding_multi import (
         multi_embedding_bag_dense,
         multi_embedding_bag_ragged,
@@ -537,10 +629,11 @@ def _fused_asym_lookup(
             packed.step_slot,
             packed.step_base,
             packed.step_block,
+            packed.step_strategy,
             block_r=packed.block_r,
+            block_b=packed.block_b or None,
             interpret=interp,
         )  # (S, B, E) f32
-
     out = jnp.zeros((n_tables, b, e), jnp.float32)
     return out.at[jnp.maximum(ti, 0)].add(
         jnp.where((ti >= 0)[:, None, None], pooled, 0.0)
@@ -548,77 +641,44 @@ def _fused_asym_lookup(
 
 
 # --------------------------------------------------------------------------
-# SPMD entry point
+# inter-core rejoin
 # --------------------------------------------------------------------------
 
 
-def partitioned_lookup(
-    packed: PackedPlan,
-    indices: jax.Array,
-    *,
-    mesh: jax.sharding.Mesh,
-    axis: str = "model",
-    batch_axes: tuple[str, ...] = (),
-    n_tables: int,
-    use_kernels: bool = False,
-    reduce_mode: str = "psum",
-) -> jax.Array:
-    """Execute the plan. indices (N, B, s) int32 -> pooled (N, B, E) f32.
+def _sparse_rejoin(local: jax.Array, packed: PackedPlan, axis: str) -> jax.Array:
+    """Owner-sharded sparse rejoin of per-core partials (inside shard_map).
 
-    ``axis`` is the "cores" mesh axis the chunks are sharded over;
-    ``batch_axes`` optionally shards B over data axes (outer DP).
-    ``reduce_mode``: "psum" (paper's atomic accumulation), or "ring"
-    (collective-permute pipelined accumulation — §Perf overlap variant).
+    ``local`` is this core's (N, B, E) partial (zeros for tables it holds no
+    chunk of).  Instead of ``psum``-ing the fully dense partials (K·N·B·E
+    collective bytes), each core sends only the owned-slot rows it actually
+    holds to each table's owner (``all_to_all`` over the rejoin maps), the
+    owner sums them (replicated/row-split slots included), and an
+    ``all_gather`` of the per-owner buckets rebuilds the replicated output.
     """
-    bspec = jax.sharding.PartitionSpec(None, batch_axes or None, None)
-
-    def spmd(packed_l, idx):
-        # shard_map leaves a leading size-1 core dim on the sharded arrays.
-        packed_l = dataclasses.replace(
-            packed_l,
-            **{
-                f: getattr(packed_l, f)[0]
-                for f in PackedPlan._ARRAY_FIELDS
-                if not f.startswith("sym_")
-            },
-        )
-        out = _local_asym_lookup(
-            packed_l, idx, n_tables=n_tables, use_kernels=use_kernels
-        )
-        if reduce_mode == "ring":
-            out = _ring_psum(out, axis)
-        else:
-            out = lax.psum(out, axis)
-        # symmetric fallback: batch-split over the core axis.
-        k = lax.axis_index(axis)
-        ksz = compat.axis_size(axis)
-        b = idx.shape[1]
-        bl = b // ksz
-        idx_slice = lax.dynamic_slice_in_dim(idx, k * bl, bl, axis=1)
-        sym = _local_sym_lookup(
-            packed_l, idx_slice, n_tables=n_tables, use_kernels=use_kernels
-        )
-        sym = lax.all_gather(sym, axis, axis=1, tiled=True)
-        return out + sym
-
-    pspec = jax.sharding.PartitionSpec
-    packed_specs = PackedPlan(
-        **{
-            f: (pspec() if f.startswith("sym_") else pspec(axis))
-            for f in PackedPlan._ARRAY_FIELDS
-        },
-        layout=packed.layout,
-        block_r=packed.block_r,
-        slot_window=packed.slot_window,
-    )
-    fn = compat.shard_map(
-        spmd,
-        mesh=mesh,
-        in_specs=(packed_specs, bspec),
-        out_specs=jax.sharding.PartitionSpec(None, batch_axes or None, None),
-        check_vma=False,
-    )
-    return fn(packed, indices)
+    n_tables = local.shape[0]
+    send_table = packed.rejoin_send  # (K, K, n_send)
+    o = packed.rejoin_bucket.shape[1]
+    me = lax.axis_index(axis)
+    # what this core sends each owner: its partial rows for that owner's
+    # tables (zeros where it holds nothing — already exact from the sweep).
+    my_send = jnp.take(send_table, me, axis=0)  # (K, n_send)
+    x = jnp.take(local, jnp.maximum(my_send, 0), axis=0)  # (K, n_send, B, E)
+    x = jnp.where((my_send >= 0)[:, :, None, None], x, 0.0)
+    r = lax.all_to_all(x, axis, split_axis=0, concat_axis=0)
+    # what arrived: core j's partials for MY owned tables send_table[j, me].
+    recv = jnp.take(send_table, me, axis=1)  # (K, n_send)
+    pos = jnp.take(packed.rejoin_owned_pos, jnp.maximum(recv, 0))
+    pos = jnp.where(recv >= 0, pos, o)  # trash bucket for -1 padding
+    owned = jnp.zeros((o + 1,) + local.shape[1:], jnp.float32)
+    owned = owned.at[pos.reshape(-1)].add(
+        r.reshape((-1,) + local.shape[1:])
+    )[:o]
+    # replicate: every core needs the full (N, B, E) pooled output.
+    gathered = lax.all_gather(owned, axis, axis=0, tiled=True)  # (K·O, B, E)
+    bucket = packed.rejoin_bucket.reshape(-1)  # (K·O,)
+    out = jnp.zeros((n_tables + 1,) + local.shape[1:], jnp.float32)
+    out = out.at[jnp.where(bucket >= 0, bucket, n_tables)].add(gathered)
+    return out[:n_tables]
 
 
 def _ring_psum(x: jax.Array, axis: str) -> jax.Array:
@@ -640,6 +700,92 @@ def _ring_psum(x: jax.Array, axis: str) -> jax.Array:
 
     (acc, _), _ = lax.scan(step, (x, x), None, length=ksz - 1)
     return acc
+
+
+# --------------------------------------------------------------------------
+# SPMD entry point
+# --------------------------------------------------------------------------
+
+
+def partitioned_lookup(
+    packed: PackedPlan,
+    indices: jax.Array,
+    *,
+    mesh: jax.sharding.Mesh,
+    axis: str = "model",
+    batch_axes: tuple[str, ...] = (),
+    n_tables: int,
+    use_kernels="fused",
+    reduce_mode: str = "sparse",
+) -> jax.Array:
+    """Execute the plan. indices (N, B, s) int32 -> pooled (N, B, E) f32.
+
+    ``axis`` is the "cores" mesh axis the chunks are sharded over;
+    ``batch_axes`` optionally shards B over data axes (outer DP).
+    ``use_kernels``: "fused" (default) = the schedule-driven streaming
+    kernel; False = XLA gather; True = deprecated spelling of the retired
+    per-slot scan (warns, routes to "fused" on the ragged layout).
+    ``reduce_mode``: "sparse" (default, owner-sharded all_to_all/all_gather
+    rejoin), "psum" (the paper's atomic accumulation), or "ring"
+    (collective-permute pipelined accumulation — §Perf overlap variant).
+    """
+    if use_kernels is True:
+        warnings.warn(
+            "use_kernels=True (the per-slot lax.scan over max-alloc windows) "
+            "is legacy: ragged plans now execute the schedule-driven fused "
+            "kernel. Pass use_kernels='fused' (or False for the XLA path).",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+    bspec = jax.sharding.PartitionSpec(None, batch_axes or None, None)
+
+    def spmd(packed_l, idx):
+        # shard_map leaves a leading size-1 core dim on the sharded arrays.
+        packed_l = packed_l.strip_core(0)
+        out = _local_asym_lookup(
+            packed_l, idx, n_tables=n_tables, use_kernels=use_kernels
+        )
+        if reduce_mode == "sparse":
+            out = _sparse_rejoin(out, packed_l, axis)
+        elif reduce_mode == "ring":
+            out = _ring_psum(out, axis)
+        else:
+            out = lax.psum(out, axis)
+        # symmetric fallback: batch-split over the core axis.
+        k = lax.axis_index(axis)
+        ksz = compat.axis_size(axis)
+        b = idx.shape[1]
+        bl = b // ksz
+        idx_slice = lax.dynamic_slice_in_dim(idx, k * bl, bl, axis=1)
+        sym = _local_sym_lookup(
+            packed_l, idx_slice, n_tables=n_tables, use_kernels=use_kernels
+        )
+        sym = lax.all_gather(sym, axis, axis=1, tiled=True)
+        return out + sym
+
+    pspec = jax.sharding.PartitionSpec
+    packed_specs = PackedPlan(
+        **{
+            f: (
+                pspec()
+                if f in PackedPlan._REPLICATED_FIELDS
+                else pspec(axis)
+            )
+            for f in PackedPlan._ARRAY_FIELDS
+        },
+        layout=packed.layout,
+        block_r=packed.block_r,
+        slot_window=packed.slot_window,
+        block_b=packed.block_b,
+    )
+    fn = compat.shard_map(
+        spmd,
+        mesh=mesh,
+        in_specs=(packed_specs, bspec),
+        out_specs=jax.sharding.PartitionSpec(None, batch_axes or None, None),
+        check_vma=False,
+    )
+    return fn(packed, indices)
 
 
 # --------------------------------------------------------------------------

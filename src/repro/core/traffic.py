@@ -1,0 +1,123 @@
+"""Modeled HBM + interconnect traffic per executor path.
+
+Interpret-mode wall clocks on CPU say nothing about TPU data movement, so the
+benchmarks (and the window-once acceptance test) account traffic analytically
+from the packed plan's geometry:
+
+* ``fused`` — the schedule-driven streaming kernel: every real row-block
+  window is DMA'd HBM→VMEM once per core (plus at most one block-0 refetch
+  when the schedule carries padding steps), multiplied by the number of
+  batch chunks (1 unless B·E exceeds the VMEM budget);
+* ``per_slot_scan_legacy`` — the retired per-slot ``lax.scan`` path, which
+  ``dynamic_slice``d a max-alloc ``(slot_window, E)`` window per slot:
+  O(S·R_max·E) traffic.  Kept in the model so the benchmark shows what the
+  restructure removed;
+* ``xla_gather`` — per-row random-access reads, ``B·s·E`` per slot.
+
+Rejoin volume compares the paper's dense ``psum`` against the owner-sharded
+sparse rejoin (``all_to_all`` over held owned-slot rows + ``all_gather`` of
+the owner buckets).  All figures are total bytes sent across the core group
+per executed batch.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.partition import PackedPlan
+from repro.kernels.embedding_multi import ragged_block_b
+
+
+def modeled_hbm_traffic(
+    packed: PackedPlan, *, batch: int, seq: int, n_tables: int
+) -> dict:
+    """Analytic traffic per path -> nested dict of byte counts."""
+    item = packed.chunk_data.dtype.itemsize
+    e = int(packed.chunk_data.shape[-1])
+    k = packed.n_cores
+    slot_table = np.asarray(packed.slot_table)
+    slot_rows = np.asarray(packed.slot_rows)
+    n_real_slots = int((slot_table >= 0).sum())
+
+    idx_bytes = n_real_slots * batch * seq * 4
+    out_bytes = n_real_slots * batch * e * item
+
+    if packed.layout == "dense":
+        s_max = slot_table.shape[1]
+        rpad = int(packed.chunk_data.shape[-2])
+        window_bytes = k * s_max * rpad * e * item
+        scan_bytes = window_bytes
+        batch_chunks = 1
+    else:
+        step_slot = np.asarray(packed.step_slot)
+        step_block = np.asarray(packed.step_block)
+        br = packed.block_r
+        _, batch_chunks = ragged_block_b(
+            batch, seq, e, br, block_b=packed.block_b or None
+        )
+        window_bytes = 0
+        for core in range(k):
+            real = step_slot[core] < slot_table.shape[1]
+            n_blocks = len(np.unique(step_block[core][real]))
+            refetch = 1 if (~real).any() and n_blocks else 0
+            window_bytes += (n_blocks + refetch) * br * e * item
+        window_bytes *= batch_chunks
+        # the retired per-slot scan: every real slot paid the core-max window
+        scan_bytes = 0
+        for core in range(k):
+            real = slot_table[core] >= 0
+            if real.any():
+                max_alloc = int(
+                    (-(-(slot_rows[core][real] + 1) // br) * br).max()
+                )
+                scan_bytes += int(real.sum()) * max_alloc * e * item
+
+    gather_bytes = n_real_slots * batch * seq * e * item
+
+    paths = {
+        "fused": {
+            "window_bytes": int(window_bytes),
+            "idx_bytes": idx_bytes,
+            "out_bytes": out_bytes,
+            "batch_chunks": int(batch_chunks),
+            "total": int(window_bytes) + idx_bytes + out_bytes,
+        },
+        "per_slot_scan_legacy": {
+            "window_bytes": int(scan_bytes),
+            "idx_bytes": idx_bytes,
+            "out_bytes": out_bytes,
+            "total": int(scan_bytes) + idx_bytes + out_bytes,
+        },
+        "xla_gather": {
+            "row_bytes": gather_bytes,
+            "idx_bytes": idx_bytes,
+            "out_bytes": out_bytes,
+            "total": gather_bytes + idx_bytes + out_bytes,
+        },
+    }
+
+    # rejoin volume (total bytes sent across the group, ring collectives)
+    dense_partial = n_tables * batch * e * item
+    psum_bytes = 2 * max(k - 1, 0) * dense_partial
+    send = np.asarray(packed.rejoin_send)
+    off_core_sends = 0
+    for c in range(k):
+        for d in range(k):
+            if c != d:
+                off_core_sends += int((send[c, d] >= 0).sum())
+    a2a_bytes = off_core_sends * batch * e * item
+    o = int(packed.rejoin_bucket.shape[1])
+    gather_rejoin = max(k - 1, 0) * k * o * batch * e * item
+    rejoin = {
+        "psum_bytes": int(psum_bytes),
+        "ring_bytes": int(psum_bytes),
+        "sparse_all_to_all_bytes": int(a2a_bytes),
+        "sparse_all_gather_bytes": int(gather_rejoin),
+        "sparse_bytes": int(a2a_bytes + gather_rejoin),
+    }
+    return {
+        "itemsize": item,
+        "batch": batch,
+        "seq": seq,
+        "paths": paths,
+        "rejoin": rejoin,
+    }

@@ -5,25 +5,30 @@ The asymmetric executor's inner loop is "for each chunk slot: pooled lookup"
 (the paper's per-table launch overhead, §IV).  These kernels fuse the whole
 slot sweep into ONE ``pallas_call``.
 
-:func:`multi_embedding_bag_ragged` (default layout) runs over the ragged
-packed buffer (core.partition ``layout="ragged"``):
+:func:`multi_embedding_bag_ragged` (default layout) is a **single streaming
+pass** over the ragged packed buffer (core.partition ``layout="ragged"``):
 
-* the host-side pack step emits a (slot, row-block) *step schedule* — one
-  step per ``block_r`` rows of each chunk, so total grid work is proportional
-  to ΣR_i, not slots x R_max;
-* grid = (batch tiles, steps); each step brings one ``(block_r, E)`` row
-  window of the buffer HBM→VMEM via a scalar-prefetch-driven BlockSpec
-  (double-buffered across steps by the pipeline — GM-style streaming at
-  row-block granularity), so VMEM residency is per-chunk-block, never
-  per-padded-max;
-* the lookup is **vectorized**: the step's ``(block_b, s)`` index tile is
-  compared against the row-block's local iota, and the resulting one-hot
-  count matrix pools the window on the MXU (``counts @ window``) — no serial
-  per-index ``dynamic_slice`` loop, and out-of-window / invalid (``-1``)
-  indices contribute exact zeros without any redirect row;
-* consecutive steps of one slot accumulate into the same output block
-  (``step_base == 0`` marks the first block and init-writes); schedule
-  padding steps target a trash slot and init-write zeros there.
+* the host-side pack step emits a (slot, row-block, strategy) *step
+  schedule* — one step per ``block_r`` rows of each chunk, grouped by the
+  slot's data-flow strategy, so total grid work is proportional to ΣR_i,
+  not slots x R_max;
+* grid = (steps,) — the step dimension is the OUTER (and only) grid axis and
+  the padded batch tile stays resident in VMEM, so each ``(block_r, E)`` row
+  window of the buffer is DMA'd HBM→VMEM exactly **once per core** (not once
+  per batch tile) via a scalar-prefetch-driven BlockSpec, double-buffered
+  across steps by the pipeline;
+* when ``B·E`` does not fit the VMEM budget the batch is chunked OUTSIDE the
+  ``pallas_call`` (``lax.map`` over batch chunks); each chunk streams the
+  buffer once, the minimum possible for that batch size;
+* **strategy is a per-step dispatch**: UB-coded steps fold all ``s`` lookup
+  positions into one conflict-free one-hot count GEMM on the MXU (run time
+  independent of index values), GM/L1-coded steps pool row-at-a-time — one
+  lookup position per accumulation pass — reproducing the paper's
+  per-strategy data flow without any per-slot ``lax.switch``;
+* out-of-window / invalid (``-1``) indices contribute exact zeros (no
+  redirect row); consecutive steps of one slot accumulate into the same
+  output block (``step_base == 0`` marks the first block and init-writes);
+  schedule padding steps target a trash slot and init-write zeros there.
 
 :func:`multi_embedding_bag_dense` is the legacy kernel over the dense
 stacked-slot ``(S, R+1, E)`` layout, kept for layout comparison benchmarks.
@@ -33,6 +38,7 @@ Output: (slots, B, E) pooled partials, scatter-added per table by the caller.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -41,28 +47,90 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
 
+# VMEM budget (bytes) for the resident batch tile + streamed window; beyond
+# it the batch is chunked outside the pallas_call (each chunk re-streams the
+# buffer — unavoidable once the batch no longer fits on-chip).
+_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _align8(n: int) -> int:
+    return int(-(-n // 8) * 8)
+
+
+def ragged_block_b(
+    b: int,
+    seq: int,
+    e: int,
+    block_r: int,
+    *,
+    block_b: int | None = None,
+    vmem_budget: int = _VMEM_BUDGET,
+) -> tuple[int, int]:
+    """Resident batch-tile rows and resulting batch chunk count.
+
+    Returns ``(block_b, n_chunks)``: the kernel keeps ``block_b`` batch rows
+    resident in VMEM; ``n_chunks == 1`` means the whole (padded) batch is
+    folded into the one-hot matmul and every buffer window streams once per
+    core.  Shared by the executor and the modeled-traffic accounting.
+    """
+    if block_b is None:
+        # per batch row: idx (s) + out (e) + count/eq row (block_r) + partial
+        # (e), f32; plus the double-buffered (block_r, E) window itself.
+        per_row = 4 * (seq + 2 * e + block_r)
+        fit = (vmem_budget - 2 * block_r * e * 4) // max(per_row, 1)
+        block_b = max(8, (int(fit) // 8) * 8)
+    block_b = min(block_b, _align8(b))
+    block_b = max(8, (block_b // 8) * 8)
+    n_chunks = -(-b // block_b)
+    return block_b, n_chunks
+
 
 # --------------------------------------------------------------------------
-# ragged layout: vectorized row-block schedule
+# ragged layout: single streaming pass, per-step strategy dispatch
 # --------------------------------------------------------------------------
 
 
 def _ragged_kernel(
-    slot_ref, base_ref, blk_ref, idx_ref, window_ref, out_ref, *, block_r: int
+    slot_ref, base_ref, blk_ref, strat_ref, idx_ref, window_ref, out_ref,
+    *, block_r: int, seq: int,
 ):
     del slot_ref, blk_ref  # consumed by the index_maps
-    t = pl.program_id(1)
+    t = pl.program_id(0)
     base = base_ref[t]
-    # (block_b, s) chunk-local indices; -1 never matches a window row.
+    strat = strat_ref[t]
+    # UB strategies (GM-UB=1, L1-UB=3) use the vectorized one-hot path.
+    is_ub = (strat == 1) | (strat == 3)
+    # (Bt, s) chunk-local indices; -1 / out-of-window never match the iota.
     rel = idx_ref[0] - base
-    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_r), 2)
-    onehot = (rel[:, :, None] == iota).astype(jnp.float32)  # (Bt, s, block_r)
-    counts = onehot.sum(axis=1)  # (Bt, block_r)
-    partial = jnp.dot(
-        counts,
-        window_ref[...].astype(jnp.float32),
-        preferred_element_type=jnp.float32,
-    )
+    bt = rel.shape[0]
+    window = window_ref[...].astype(jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, block_r), 1)
+
+    def _ub_onehot():
+        # UB: fold every lookup position into ONE count matrix, then a single
+        # conflict-free GEMM on the MXU — run time independent of the index
+        # values (the paper's vectorized UB look-up).
+        def cnt(j, c):
+            return c + (rel[:, j][:, None] == iota).astype(jnp.float32)
+
+        counts = jax.lax.fori_loop(
+            0, seq, cnt, jnp.zeros((bt, block_r), jnp.float32)
+        )
+        return jnp.dot(counts, window, preferred_element_type=jnp.float32)
+
+    def _gm_rowstream():
+        # GM/L1: row-at-a-time pooling — one lookup position per pass through
+        # the accumulation buffer (the paper's "read one row at a time ...
+        # followed by pooling this row in an accumulation buffer").
+        def pos(j, acc):
+            eq = (rel[:, j][:, None] == iota).astype(jnp.float32)
+            return acc + jnp.dot(eq, window, preferred_element_type=jnp.float32)
+
+        return jax.lax.fori_loop(
+            0, seq, pos, jnp.zeros((bt, window.shape[1]), jnp.float32)
+        )
+
+    partial = jax.lax.cond(is_ub, _ub_onehot, _gm_rowstream)
 
     @pl.when(base == 0)
     def _init():
@@ -73,61 +141,85 @@ def _ragged_kernel(
         out_ref[0] += partial
 
 
-@functools.partial(jax.jit, static_argnames=("block_r", "block_b", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_r", "block_b", "vmem_budget", "interpret"),
+)
 def multi_embedding_bag_ragged(
     buffer: jax.Array,  # (T, E) ragged packed buffer, T % block_r == 0
     lidx: jax.Array,  # (S, B, s) int32 chunk-local indices, -1 = skip
     step_slot: jax.Array,  # (n_steps,) int32, S = trash slot (padding step)
     step_base: jax.Array,  # (n_steps,) int32 chunk-local block base row
     step_block: jax.Array,  # (n_steps,) int32 buffer row-block index
+    step_strategy: jax.Array,  # (n_steps,) int32 strategy code of the step
     *,
     block_r: int,
-    block_b: int = 128,
+    block_b: int | None = None,
+    vmem_budget: int = _VMEM_BUDGET,
     interpret: bool = False,
 ) -> jax.Array:
-    """All slots' pooled lookups in one pallas_call -> (S, B, E) f32."""
+    """All slots' pooled lookups in one streaming pass -> (S, B, E) f32."""
     t_rows, e = buffer.shape
     s_slots, b, seq = lidx.shape
     n_steps = step_slot.shape[0]
     if t_rows % block_r:
         raise ValueError("buffer rows must be a multiple of block_r")
-    block_b = min(block_b, b)
-    pad_b = (-b) % block_b
+    bb, n_chunks = ragged_block_b(
+        b, seq, e, block_r, block_b=block_b, vmem_budget=vmem_budget
+    )
+    pad_b = n_chunks * bb - b
     # trash slot S absorbs schedule padding steps; its indices never match.
     lidx = jnp.pad(lidx, ((0, 1), (0, pad_b), (0, 0)), constant_values=-1)
-    bp = b + pad_b
 
-    kernel = functools.partial(_ragged_kernel, block_r=block_r)
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=(bp // block_b, n_steps),
-            in_specs=[
-                # the step's slot index tile (resident across the slot's steps)
-                pl.BlockSpec(
-                    (1, block_b, seq), lambda bi, t, ss, sb, sk: (ss[t], bi, 0)
-                ),
-                # the step's (block_r, E) row window of the ragged buffer:
-                # streamed HBM->VMEM, double-buffered by the pipeline.
-                pl.BlockSpec((block_r, e), lambda bi, t, ss, sb, sk: (sk[t], 0)),
-            ],
-            out_specs=pl.BlockSpec(
-                (1, block_b, e), lambda bi, t, ss, sb, sk: (ss[t], bi, 0)
-            ),
-        ),
-        out_shape=jax.ShapeDtypeStruct((s_slots + 1, bp, e), jnp.float32),
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=("arbitrary", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(
+    kernel = functools.partial(_ragged_kernel, block_r=block_r, seq=seq)
+    prefetch = (
         step_slot.astype(jnp.int32),
         step_base.astype(jnp.int32),
         step_block.astype(jnp.int32),
-        lidx.astype(jnp.int32),
-        buffer,
+        step_strategy.astype(jnp.int32),
     )
+
+    def one_pass(lidx_tile: jax.Array) -> jax.Array:
+        """(S+1, bb, s) resident batch tile -> (S+1, bb, E) pooled."""
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=4,
+                grid=(n_steps,),
+                in_specs=[
+                    # the step's slot index tile: resident across the slot's
+                    # (consecutive) steps — refetched only on slot change.
+                    pl.BlockSpec(
+                        (1, bb, seq), lambda t, ss, sb, sk, st: (ss[t], 0, 0)
+                    ),
+                    # the step's (block_r, E) row window of the ragged
+                    # buffer: streamed HBM->VMEM exactly once per core,
+                    # double-buffered across steps by the pipeline.
+                    pl.BlockSpec(
+                        (block_r, e), lambda t, ss, sb, sk, st: (sk[t], 0)
+                    ),
+                ],
+                out_specs=pl.BlockSpec(
+                    (1, bb, e), lambda t, ss, sb, sk, st: (ss[t], 0, 0)
+                ),
+            ),
+            out_shape=jax.ShapeDtypeStruct((s_slots + 1, bb, e), jnp.float32),
+            compiler_params=compat.tpu_compiler_params(
+                dimension_semantics=("arbitrary",),
+            ),
+            interpret=interpret,
+        )(*prefetch, lidx_tile, buffer)
+
+    if n_chunks == 1:
+        out = one_pass(lidx)
+    else:
+        # batch exceeds the VMEM budget: chunk it OUTSIDE the pallas_call;
+        # each chunk is one full streaming pass over the buffer.
+        tiles = lidx.reshape(s_slots + 1, n_chunks, bb, seq).transpose(
+            1, 0, 2, 3
+        )
+        out = jax.lax.map(one_pass, tiles)  # (n_chunks, S+1, bb, E)
+        out = out.transpose(1, 0, 2, 3).reshape(s_slots + 1, n_chunks * bb, e)
     return out[:s_slots, :b]
 
 
@@ -200,5 +292,19 @@ def multi_embedding_bag_dense(
     return out[:, :b]
 
 
-# Backwards-compatible alias: the fused entry point used to be dense-only.
-multi_embedding_bag = multi_embedding_bag_dense
+def multi_embedding_bag(*args, **kwargs):
+    """Deprecated alias — now the RAGGED streaming entry point.
+
+    ``multi_embedding_bag`` used to name the dense stacked-slot kernel; the
+    ragged single-pass kernel is the default executor path.  Call
+    :func:`multi_embedding_bag_ragged` (or ``_dense`` for the legacy layout)
+    directly.
+    """
+    warnings.warn(
+        "multi_embedding_bag now points at multi_embedding_bag_ragged (the "
+        "single-pass streaming kernel); call multi_embedding_bag_ragged "
+        "directly, or multi_embedding_bag_dense for the legacy dense layout.",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return multi_embedding_bag_ragged(*args, **kwargs)

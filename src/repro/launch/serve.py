@@ -36,6 +36,15 @@ def main(argv=None):
                    choices=["uniform", "real", "fixed", "all"])
     p.add_argument("--layout", default="ragged", choices=["ragged", "dense"],
                    help="packed chunk layout for the asymmetric executor")
+    p.add_argument("--kernels", default="fused", choices=["fused", "xla"],
+                   help="executor: schedule-driven streaming kernel or XLA gather")
+    p.add_argument("--reduce", default="sparse",
+                   choices=["sparse", "psum", "ring"],
+                   help="inter-core rejoin: owner-sharded sparse (default), "
+                        "dense psum, or ring accumulation")
+    p.add_argument("--autotune", action="store_true",
+                   help="sweep the fused kernel's block_r/block_b before "
+                        "packing (recorded in plan.meta['tuning'])")
     args = p.parse_args(argv)
 
     wl = (small_workload(batch=args.batch) if args.workload == "smoke"
@@ -53,17 +62,27 @@ def main(argv=None):
     print(f"[serve] plan: {len(bag.plan.assignments)} chunks, "
           f"{len(bag.plan.symmetric_tables)} symmetric, {n_dev} devices")
     params = init_dlrm(cfg, jax.random.PRNGKey(0))
-    packed = bag.pack(params["tables"])
+    packed = bag.pack(params["tables"], autotune=args.autotune)
     lay = bag.layout_summary()
     if lay:
         print(f"[serve] layout={lay['kind']} chunk_bytes={lay['chunk_bytes']:,} "
               f"(dense would be {lay['dense_bytes']:,}; "
               f"{lay['bytes_vs_dense']:.2%} of dense, "
               f"padding_frac={lay['padding_frac']:.2%})")
+    tuning = bag.plan.meta.get("tuning")
+    if args.autotune and tuning and tuning.get("best"):
+        best = tuning["best"]
+        print(f"[serve] autotuned block_r={best['block_r']} "
+              f"block_b={best['block_b'] or 'auto'} "
+              f"({len(tuning['candidates'])} candidates, "
+              f"backend={tuning['backend']})")
+    use_kernels = "fused" if args.kernels == "fused" else False
+    print(f"[serve] executor kernels={args.kernels} reduce={args.reduce}")
 
     @jax.jit
     def infer(batch):
-        return forward_packed(cfg, bag, packed, params, batch, mesh=mesh)
+        return forward_packed(cfg, bag, packed, params, batch, mesh=mesh,
+                              use_kernels=use_kernels, reduce_mode=args.reduce)
 
     dists = (["uniform", "real", "fixed"] if args.distribution == "all"
              else [args.distribution])

@@ -118,10 +118,11 @@ def forward_packed(
     mesh,
     axis: str = "model",
     batch_axes: tuple[str, ...] = (),
-    use_kernels: bool = False,
-    reduce_mode: str = "psum",
+    use_kernels="fused",
+    reduce_mode: str = "sparse",
 ) -> jax.Array:
-    """The paper's partitioned serving path."""
+    """The paper's partitioned serving path (fused streaming executor +
+    owner-sharded sparse rejoin by default)."""
     emb = bag.apply(
         packed,
         batch["indices"],

@@ -59,6 +59,7 @@ class Server:
         hedge_factor: float = 3.0,
         n_replicas: int = 2,
         layout: dict | None = None,
+        exec_mode: dict | None = None,
     ):
         self.step_fn = step_fn
         self.batcher = Batcher(max_batch, max_wait_s)
@@ -70,6 +71,10 @@ class Server:
         # packed-layout summary (plan.meta["layout"]) so deployment stats
         # report the executor's memory/padding efficiency alongside latency.
         self.layout = dict(layout) if layout else {}
+        # executor configuration (use_kernels / reduce_mode / tuning): the
+        # deployment-level record of which data-flow path served the traffic.
+        self.exec_mode = dict(exec_mode) if exec_mode else {
+            "use_kernels": "fused", "reduce_mode": "sparse"}
 
     def submit(self, payload: Any) -> None:
         self.batcher.submit(payload)
@@ -108,4 +113,5 @@ class Server:
         s["hedged_batches"] = self.hedges
         if self.layout:
             s["layout"] = dict(self.layout)
+        s["exec_mode"] = dict(self.exec_mode)
         return s

@@ -174,6 +174,49 @@ def test_dryrun_cells_debug_mesh():
     """, devices=8)
 
 
+def test_sparse_rejoin_matches_psum_on_mesh():
+    """Owner-sharded sparse rejoin ≡ dense psum on a real 8-device mesh,
+    including batch-split replicas, a row-split table, and the symmetric
+    fallback group."""
+    run_py("""
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.core import make_workload, stack_indices
+        from repro.core.partition import pack_plan, partitioned_lookup
+        from repro.core.strategies import ChunkAssignment, Plan, Strategy
+        wl = make_workload("rej", [512, 64, 96, 40], dim=16, batch=32)
+        plan = Plan(
+            workload_name="rej", n_cores=4,
+            assignments=(
+                ChunkAssignment(0, 0, 0, 512, Strategy.GM, batch_frac=(0, 2)),
+                ChunkAssignment(0, 1, 0, 512, Strategy.L1, batch_frac=(1, 2)),
+                ChunkAssignment(1, 1, 0, 32, Strategy.L1_UB),
+                ChunkAssignment(1, 2, 32, 32, Strategy.L1_UB),
+                ChunkAssignment(2, 3, 0, 96, Strategy.GM_UB),
+            ),
+            symmetric_tables=(3,), symmetric_strategies=(Strategy.L1_UB,),
+        )
+        plan.validate(wl.tables)
+        params = [jax.random.normal(jax.random.PRNGKey(i), (t.rows, 16), jnp.float32)
+                  for i, t in enumerate(wl.tables)]
+        packed = pack_plan(plan, wl.tables, params)
+        idx = [jax.random.randint(jax.random.PRNGKey(i+10), (wl.batch, t.seq), 0, t.rows)
+               for i, t in enumerate(wl.tables)]
+        sidx = stack_indices(idx, 1)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        outs = {}
+        for mode in ("sparse", "psum"):
+            for uk in (False, "fused"):
+                outs[(mode, uk)] = np.asarray(partitioned_lookup(
+                    packed, sidx, mesh=mesh, n_tables=4,
+                    use_kernels=uk, reduce_mode=mode))
+        for key, got in outs.items():
+            np.testing.assert_allclose(got, outs[("psum", False)],
+                                       rtol=2e-5, atol=2e-5, err_msg=str(key))
+        print("OK")
+    """)
+
+
 def test_partitioned_lookup_fused_kernel():
     """One fused multi-slot pallas_call for the whole slot sweep."""
     run_py("""

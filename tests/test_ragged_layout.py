@@ -17,7 +17,6 @@ from repro.core import PartitionedEmbeddingBag, analytic_model, make_workload
 from repro.core.cost_model import TPU_V5E
 from repro.core.embedding import stack_indices
 from repro.core.partition import (
-    PackedPlan,
     _local_asym_lookup,
     _local_sym_lookup,
     pack_plan,
@@ -31,17 +30,6 @@ def _small_model(l1_bytes=4096):
     return analytic_model(dataclasses.replace(TPU_V5E, l1_bytes=l1_bytes))
 
 
-def _strip_core(packed: PackedPlan, core: int) -> PackedPlan:
-    return dataclasses.replace(
-        packed,
-        **{
-            f: getattr(packed, f)[core]
-            for f in PackedPlan._ARRAY_FIELDS
-            if not f.startswith("sym_")
-        },
-    )
-
-
 def _emulated_lookup(packed, sidx, n_tables, use_kernels):
     """Per-core local sweeps + psum + batch-split symmetric fallback."""
     k = packed.n_cores
@@ -49,7 +37,7 @@ def _emulated_lookup(packed, sidx, n_tables, use_kernels):
     out = jnp.zeros((n_tables, b, E), jnp.float32)
     for core in range(k):
         out = out + _local_asym_lookup(
-            _strip_core(packed, core), sidx, n_tables=n_tables,
+            packed.strip_core(core), sidx, n_tables=n_tables,
             use_kernels=use_kernels,
         )
     bl = b // k
@@ -217,8 +205,14 @@ def test_ragged_buffer_invariants():
             np.testing.assert_array_equal(
                 buf[core, starts[core, s] + r], 0.0
             )
-            # per-slot kernel window stays in bounds
-            assert starts[core, s] + packed.slot_window <= buf.shape[1]
+            # the slot's scheduled row-blocks tile exactly its allocation
+            alloc = -(-(r + 1) // br) * br
+            mask = np.asarray(packed.step_slot)[core] == s
+            blocks = np.asarray(packed.step_block)[core][mask]
+            np.testing.assert_array_equal(
+                np.sort(blocks) * br,
+                starts[core, s] + np.arange(alloc // br) * br,
+            )
 
 
 def test_skewed_pack_shrinks_4x():
