@@ -1,16 +1,20 @@
-# Tier-1 flow: tests + benchmark regression gate.
+# Tier-1 flow: tests + benchmark regression gates.
 #
 #   make test         — the repo's tier-1 pytest suite
-#   make bench-check  — regenerate the layout bench and diff it against the
-#                       committed BENCH_embedding_layout.json (>20% wall-time
-#                       or bytes regression fails)
+#   make bench-check  — regenerate the layout bench + the drift bench (fast
+#                       smoke mode) and diff them against the committed
+#                       BENCH_embedding_layout.json / BENCH_drift.json
+#                       (>20% bytes/modeled regression, or a flipped drift
+#                       invariant, fails)
 #   make tier1        — both
 #   make bench        — regenerate BENCH_embedding_layout.json in place
+#   make driftbench   — full drift scenario matrix (modeled + served loop),
+#                       regenerating BENCH_drift.json in place
 
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-check bench tier1
+.PHONY: test bench-check bench driftbench tier1
 
 test:
 	$(PY) -m pytest -x -q
@@ -21,5 +25,8 @@ bench-check:
 bench:
 	$(PY) -c "import sys; sys.path.insert(0, '.'); \
 	from benchmarks.kernelbench import layout_scenario; layout_scenario()"
+
+driftbench:
+	$(PY) benchmarks/driftbench.py
 
 tier1: test bench-check

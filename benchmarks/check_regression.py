@@ -1,11 +1,13 @@
-"""Benchmark regression gate: diff a fresh bench JSON against the committed one.
+"""Benchmark regression gate: diff fresh bench JSONs against committed ones.
 
     PYTHONPATH=src python benchmarks/check_regression.py            # regenerate + diff
     PYTHONPATH=src python benchmarks/check_regression.py --candidate new.json
 
-Fails (exit 1) when the candidate regresses the committed
-``BENCH_embedding_layout.json`` by more than the tolerance on any gated
-metric:
+Fails (exit 1) when a candidate regresses a committed baseline by more than
+the tolerance on any gated metric.  Two baselines are gated (see
+``benchmarks/README.md`` for the full schema + how to regenerate):
+
+``BENCH_embedding_layout.json`` (kernelbench layout scenario):
 
 * **bytes** (packed chunk bytes, modeled HBM traffic) — deterministic,
   gated at ``--bytes-tol`` (default 20%);
@@ -16,6 +18,18 @@ metric:
   catastrophic regressions while the byte/traffic columns carry the hard
   gate.  Wall is compared only when both sides ran the same backend +
   compile mode.
+
+``BENCH_drift.json`` (driftbench scenario matrix), when committed:
+
+* **modeled P99 / modeled traffic** per scenario x {static, replanned} —
+  deterministic cost-model outputs, gated at ``--bytes-tol``;
+* **degrade factors** for the replanned plan — gated at ``--bytes-tol``
+  (the replanned executor must stay bounded across the matrix);
+* **invariants** — every boolean the committed record asserts (replanned
+  bounded, static degrades more, server actually hot-swapped) must still be
+  true in the candidate.  Served wall clocks are never gated.  The drift
+  candidate is regenerated in fast smoke mode (``--no-serve``: modeled
+  matrix only, no jit) so the gate stays CPU-quick.
 
 Wired into ``make bench-check`` (the tier-1 flow's companion target).
 """
@@ -29,6 +43,7 @@ from pathlib import Path
 
 _REPO_ROOT = Path(__file__).resolve().parent.parent
 _BASELINE = _REPO_ROOT / "BENCH_embedding_layout.json"
+_DRIFT_BASELINE = _REPO_ROOT / "BENCH_drift.json"
 
 _BYTES_KEYS = ("chunk_bytes",)
 _TRAFFIC_PATHS = ("fused", "xla_gather")
@@ -96,6 +111,49 @@ def compare(
     return failures
 
 
+def _drift_metrics(record: dict) -> dict[str, float]:
+    """driftbench record -> {metric_name: value} for the gated (deterministic)
+    columns: modeled P99/traffic per scenario x mode and the replanned degrade
+    factors.  Served wall clocks are intentionally excluded."""
+    out: dict[str, float] = {}
+    for s in record.get("scenarios", []):
+        for mode in ("static", "replanned"):
+            entry = s.get(mode, {})
+            for k in ("modeled_p99_us", "modeled_traffic_bytes"):
+                if k in entry:
+                    out[f"drift.{s['name']}.{mode}.{k}"] = float(entry[k])
+    for k in ("p99", "traffic"):
+        v = record.get("degrade", {}).get("replanned", {}).get(k)
+        if v is not None:
+            out[f"drift.degrade.replanned.{k}"] = float(v)
+    return out
+
+
+def compare_drift(
+    baseline: dict, candidate: dict, *, tol: float = 0.20
+) -> list[str]:
+    """Drift-bench gate: deterministic metric regressions + invariant flips."""
+    failures: list[str] = []
+    base, cand = _drift_metrics(baseline), _drift_metrics(candidate)
+    for name, b in sorted(base.items()):
+        c = cand.get(name)
+        if c is None:
+            failures.append(f"{name}: missing from candidate (was {b:.2f})")
+        elif b > 0 and c > b * (1.0 + tol):
+            failures.append(
+                f"{name}: {c:.2f} vs baseline {b:.2f} "
+                f"(+{(c / b - 1) * 100:.1f}% > {tol * 100:.0f}% tol)"
+            )
+    for k, v in baseline.get("invariants", {}).items():
+        if not v:
+            continue
+        if k == "server_replanned" and "served" not in candidate:
+            continue  # candidate ran in fast smoke mode (modeled only)
+        if not candidate.get("invariants", {}).get(k, False):
+            failures.append(f"drift invariant {k!r}: true in baseline, now false")
+    return failures
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--baseline", type=Path, default=_BASELINE)
@@ -106,6 +164,14 @@ def main(argv=None) -> int:
     p.add_argument("--bytes-tol", type=float, default=0.20)
     p.add_argument("--wall-tol", type=float, default=0.20)
     p.add_argument("--wall-tol-interpret", type=float, default=1.00)
+    p.add_argument("--baseline-drift", type=Path, default=_DRIFT_BASELINE)
+    p.add_argument(
+        "--candidate-drift", type=Path, default=None,
+        help="drift bench JSON to check; omitted = regenerate in fast smoke "
+             "mode (modeled matrix only) when the baseline exists",
+    )
+    p.add_argument("--skip-drift", action="store_true",
+                   help="gate only the layout bench")
     args = p.parse_args(argv)
 
     baseline = json.loads(args.baseline.read_text())
@@ -129,6 +195,25 @@ def main(argv=None) -> int:
         if name in cand and base[name] > 0:
             delta = (cand[name] / base[name] - 1) * 100
             print(f"[bench-check] {name}: {cand[name]:.0f} ({delta:+.1f}%)")
+
+    if not args.skip_drift and args.baseline_drift.exists():
+        drift_base = json.loads(args.baseline_drift.read_text())
+        if args.candidate_drift is not None:
+            drift_cand = json.loads(args.candidate_drift.read_text())
+        else:
+            sys.path.insert(0, str(_REPO_ROOT))
+            from benchmarks.driftbench import run as drift_run
+
+            tmp = Path(tempfile.mkstemp(suffix=".json")[1])
+            drift_cand = drift_run(serve=False, csv=False, out_path=tmp)
+            print(f"[bench-check] regenerated drift candidate -> {tmp}")
+        failures += compare_drift(drift_base, drift_cand, tol=args.bytes_tol)
+        db, dc = _drift_metrics(drift_base), _drift_metrics(drift_cand)
+        for name in sorted(db):
+            if name in dc and db[name] > 0:
+                delta = (dc[name] / db[name] - 1) * 100
+                print(f"[bench-check] {name}: {dc[name]:.2f} ({delta:+.1f}%)")
+
     if failures:
         print(f"[bench-check] FAIL — {len(failures)} regression(s):")
         for f in failures:

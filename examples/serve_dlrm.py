@@ -19,6 +19,7 @@ import numpy as np
 
 from repro import compat
 from repro.core import PartitionedEmbeddingBag, TPU_V5E, analytic_model
+from repro.data.distributions import Fixed, Uniform, Zipf
 from repro.data.synthetic import ctr_batch
 from repro.data.workloads import small_workload
 from repro.models.dlrm import DLRMConfig, forward_packed, init_dlrm
@@ -61,7 +62,7 @@ def main():
                      exec_mode={"use_kernels": "fused",
                                 "reduce_mode": "sparse"})
         rng = np.random.default_rng(0)
-        for dist in ("uniform", "real", "fixed"):
+        for dist in (Uniform(), Zipf(1.05, hot_prefix=False), Fixed()):
             for i in range(args.queries // args.batch):
                 b = ctr_batch(rng, wl, distribution=dist, batch=args.batch)
                 for q in range(args.batch):

@@ -8,6 +8,7 @@ from repro.core.cost_model import (
     CostModel,
     HardwareSpec,
     analytic_model,
+    freq_of,
 )
 from repro.core.autotune import autotune_block_sizes
 from repro.core.embedding import PartitionedEmbeddingBag, stack_indices
@@ -17,7 +18,7 @@ from repro.core.partition import (
     partitioned_lookup,
     vocab_parallel_embed,
 )
-from repro.core.traffic import modeled_hbm_traffic
+from repro.core.traffic import modeled_hbm_traffic, modeled_plan_traffic
 from repro.core.planner import (
     PLANNERS,
     plan_asymmetric,
@@ -45,8 +46,10 @@ __all__ = [
     "Workload",
     "analytic_model",
     "autotune_block_sizes",
+    "freq_of",
     "make_workload",
     "modeled_hbm_traffic",
+    "modeled_plan_traffic",
     "pack_plan",
     "partitioned_lookup",
     "plan_asymmetric",

@@ -11,6 +11,18 @@ measurements.  ``analytic_model`` seeds the betas from hardware datasheet
 constants so the planner works before any profiling, mirroring the paper's
 high-level estimation (§IV-B); ``fit`` replaces them with OLS estimates from
 (simulated or real) measurements.
+
+Frequency-aware pricing (DESIGN.md §5): every prediction entry point accepts
+an optional per-table access histogram ``freq`` (any object with the
+``RowProbs`` mass interface from :mod:`repro.data.distributions`) plus the
+chunk's ``row_range`` within its source table.  With a histogram the work
+term is scaled by the mass actually landing in the chunk
+(``freq.range_mass``), and GM — the only strategy whose latency depends on
+*which* rows are hit — pays a conflict-serialization surcharge proportional
+to the chunk's access concentration (``gm_conflict``; the paper's
+bank/line-conflict pathology on unbalanced distributions, §IV-C).  With
+``freq=None`` everything degenerates exactly to the uniform-assumption
+model above.
 """
 from __future__ import annotations
 
@@ -21,6 +33,20 @@ import numpy as np
 
 from repro.core.strategies import ALL_STRATEGIES, Strategy
 from repro.core.tables import TableSpec
+
+__all__ = [
+    "A100",
+    "ASCEND_910",
+    "TPU_V5E",
+    "HARDWARE",
+    "Betas",
+    "CostModel",
+    "HardwareSpec",
+    "analytic_model",
+    "core_times",
+    "freq_of",
+    "lif",
+]
 
 
 # --------------------------------------------------------------------------
@@ -103,22 +129,66 @@ HARDWARE: dict[str, HardwareSpec] = {
 Betas = tuple[float, float, float]  # (b0, b1, b2)
 
 
+def freq_of(freqs, table_idx: int):
+    """Normalize a per-table histogram collection (None | sequence | mapping
+    keyed by table index) to one table's histogram or ``None``."""
+    if freqs is None:
+        return None
+    if isinstance(freqs, Mapping):
+        return freqs.get(table_idx)
+    return freqs[table_idx] if table_idx < len(freqs) else None
+
+
 @dataclasses.dataclass
 class CostModel:
-    """Per-strategy linear P99 model (paper eq. 2)."""
+    """Per-strategy linear P99 model (paper eq. 2).
+
+    ``gm_conflict`` scales the GM conflict-serialization surcharge applied
+    under a measured access histogram (see module docstring): lookups piling
+    onto few hot rows serialize on memory banks/cache lines, so GM work is
+    multiplied by ``1 + gm_conflict * concentration`` where concentration is
+    the access mass of the chunk's ``conflict_rows`` (bank-count-scale)
+    hottest rows, normalized by the chunk's total mass.  Uniform traffic →
+    concentration ≈ 0 → no surcharge; the paper's ``fixed`` distribution →
+    concentration = 1 (the >10x pathology).  L1/UB strategies are
+    conflict-free by construction (persistent scratchpad / one-hot MXU
+    sweep) — the robustness asymmetry the paper measures.
+    """
 
     betas: dict[Strategy, Betas]
     hardware: HardwareSpec = TPU_V5E
+    gm_conflict: float = 8.0
+    conflict_rows: int = 64
 
     # -- prediction ---------------------------------------------------------
 
     def predict(
-        self, table: TableSpec, batch: int, cores: int, strategy: Strategy
+        self,
+        table: TableSpec,
+        batch: int,
+        cores: int,
+        strategy: Strategy,
+        freq=None,
+        row_range: tuple[int, int] | None = None,
     ) -> float:
         """Estimated P99 latency contribution (seconds) of one table on one
-        core, with the batch split over ``cores`` cores."""
+        core, with the batch split over ``cores`` cores.
+
+        ``freq`` is the access histogram of the *source table* (``RowProbs``
+        interface); ``row_range`` identifies the chunk ``[lo, hi)`` being
+        priced within it (default: the whole table, ``table.rows`` rows).
+        With a histogram the work term is scaled by the chunk's access mass
+        and GM pays the conflict surcharge; ``freq=None`` reproduces the
+        uniform-assumption model exactly."""
         b0, b1, b2 = self.betas[strategy]
         work = batch * table.seq / max(cores, 1)
+        if freq is not None:
+            lo, hi = row_range if row_range is not None else (0, table.rows)
+            mass = freq.range_mass(lo, hi)
+            work *= mass
+            if strategy is Strategy.GM and mass > 0:
+                conc = freq.range_top_mass(lo, hi, self.conflict_rows) / mass
+                work *= 1.0 + self.gm_conflict * conc
         j = b0 + b1 * work
         if strategy.is_ub:
             j += b2 * table.rows
@@ -130,8 +200,13 @@ class CostModel:
         batch: int,
         cores: int,
         candidates: Sequence[Strategy],
+        freq=None,
+        row_range: tuple[int, int] | None = None,
     ) -> tuple[Strategy, float]:
-        costs = [(self.predict(table, batch, cores, s), s) for s in candidates]
+        costs = [
+            (self.predict(table, batch, cores, s, freq, row_range), s)
+            for s in candidates
+        ]
         cost, strat = min(costs, key=lambda cs: cs[0])
         return strat, cost
 
@@ -226,13 +301,15 @@ def core_times(
     plan_assignments,
     n_cores: int,
     symmetric: Mapping[int, Strategy] | None = None,
+    freqs=None,
 ) -> np.ndarray:
     """Per-core accumulated P99 estimate for a plan.
 
     Asymmetric chunks serve the full batch slice assigned to them
     (replication splits the batch); the chunk behaves like a table with
     ``rows``-row footprint.  Symmetric tables add their K-way batch-split
-    cost to every core.
+    cost to every core.  ``freqs`` (None | sequence | mapping by table index)
+    re-prices every chunk under the given access histograms.
     """
     t = np.zeros(n_cores)
     for a in plan_assignments:
@@ -240,11 +317,15 @@ def core_times(
         chunk_tab = dataclasses.replace(tab, rows=a.rows)
         # the chunk serves batch/replicas queries entirely on this core
         eff_batch = batch // max(a.replicas, 1)
-        t[a.core] += model.predict(chunk_tab, eff_batch, 1, a.strategy)
+        t[a.core] += model.predict(
+            chunk_tab, eff_batch, 1, a.strategy,
+            freq_of(freqs, a.table_idx),
+            (a.row_offset, a.row_offset + a.rows),
+        )
     if symmetric:
         for ti, strat in symmetric.items():
             tab = tables[ti]
-            t += model.predict(tab, batch, n_cores, strat)
+            t += model.predict(tab, batch, n_cores, strat, freq_of(freqs, ti))
     return t
 
 

@@ -36,6 +36,43 @@ trailing zero row; all invalid lookups (out-of-chunk, sequence padding ``-1``,
 empty slots, other replicas' batch rows) are redirected to a zero row (XLA
 path) or contribute exact zeros in-kernel (fused path), so no post-hoc
 masking of the pooled result is needed.
+
+The ``use_kernels`` / ``reduce_mode`` contract (single source of truth —
+``partitioned_lookup``, ``PartitionedEmbeddingBag.apply``,
+``forward_packed``, and the serve CLI all forward here):
+
+* ``use_kernels="fused"`` (default) — ONE schedule-driven streaming
+  ``pallas_call`` for the whole asymmetric sweep;
+* ``use_kernels=False`` — the XLA gather path: identical math, no Pallas
+  (the CPU-fast correctness oracle);
+* ``use_kernels=True`` — deprecated spelling of the retired per-slot scan:
+  warns and routes ragged plans to ``"fused"`` (``layout="dense"`` keeps the
+  legacy stacked-slot scan, for comparison benchmarks only);
+* ``reduce_mode`` ∈ {``"sparse"`` (default owner-sharded all_to_all +
+  all_gather rejoin), ``"psum"`` (the paper's atomic accumulation),
+  ``"ring"`` (collective-permute pipelined accumulation)} — all three are
+  parity-identical; they differ only in collective volume/overlap.
+
+``plan.meta`` key reference (every producer annotates the Plan it returns or
+packs; all values are JSON-able):
+
+* ``planner``      — planner name + option tags (``"asymmetric+lpt+freq"``);
+* ``lif``/``fell_back`` — load-imbalance factor of the greedy load vector
+  and whether the symmetric LIF fallback engaged (asymmetric planner);
+* ``l1_left``      — remaining symmetric L1 budget (symmetric planner);
+* ``distribution`` — per-table access-histogram summaries the plan was
+  priced under (``None`` = the uniform assumption; see
+  ``repro.core.planner._distribution_meta`` and DESIGN.md §5);
+* ``layout``       — written by :func:`pack_plan`: ``kind``,
+  ``chunk_bytes``/``dense_bytes``/``bytes_vs_dense``, ``block_r``/
+  ``block_b``, ``slot_window``, ``n_steps``/``n_padding_steps``,
+  ``padding_frac``;
+* ``rejoin``       — written by :func:`pack_plan`: ``n_owned_max``,
+  ``n_send_max``, ``owned_per_core`` (owner-sharded rejoin shape);
+* ``tuning``       — written by ``repro.core.autotune.autotune_block_sizes``
+  (via ``bag.pack(autotune=True)`` / ``--autotune``): the full
+  ``candidates`` sweep, the ``best`` pick, ``backend``/``compiled``/
+  ``iters``.
 """
 from __future__ import annotations
 
@@ -55,6 +92,14 @@ from repro.core.tables import TableSpec
 from repro.kernels.embedding_gm import embedding_bag_gm
 from repro.kernels.embedding_l1 import embedding_bag_l1
 from repro.kernels.embedding_ub import embedding_bag_ub
+
+__all__ = [
+    "STRATEGY_CODE",
+    "PackedPlan",
+    "pack_plan",
+    "partitioned_lookup",
+    "vocab_parallel_embed",
+]
 
 STRATEGY_CODE: dict[Strategy, int] = {
     Strategy.GM: 0,

@@ -16,6 +16,22 @@ Beyond-paper (§Perf, opt-in flags):
   a core (paper fixes replication to 1).
 * ``lpt``             — sort by descending *estimated cost* (classic LPT bound
   for makespan) instead of the paper's (desc seq, asc size) key.
+* ``freqs``           — frequency-aware planning (DESIGN.md §5): per-table
+  access histograms (``RowProbs`` from :mod:`repro.data.distributions`).
+  Chunk costs are priced under the measured mass (``CostModel.predict`` with
+  ``freq``/``row_range``), GM placements pay the conflict surcharge on hot
+  traffic, and oversized tables gain a *hot-prefix split*: when the hottest
+  L1-sized prefix carries most of the access mass, the table splits into a
+  small L1-resident hot chunk plus a cheap cold GM remainder — the promotion
+  raw table size alone would never justify.  ``freqs=None`` (default) is the
+  uniform assumption and reproduces the paper's planner exactly.
+
+Every planner records what it assumed in ``plan.meta`` (see
+:mod:`repro.core.partition` for the full ``plan.meta`` key reference):
+``planner`` (name + option tags), ``lif``/``fell_back`` (asymmetric), and
+``distribution`` — per-table histogram summaries when ``freqs`` was given
+(``None`` entries = uniform assumption), so the serving layer can later diff
+live traffic against what the plan was priced under.
 """
 from __future__ import annotations
 
@@ -24,9 +40,17 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.cost_model import CostModel, core_times, lif
+from repro.core.cost_model import CostModel, core_times, freq_of, lif
 from repro.core.strategies import ChunkAssignment, Plan, Strategy
 from repro.core.tables import TableSpec, Workload
+
+__all__ = [
+    "PLANNERS",
+    "plan_asymmetric",
+    "plan_baseline",
+    "plan_symmetric",
+    "predicted_p99",
+]
 
 
 # --------------------------------------------------------------------------
@@ -56,10 +80,27 @@ def predicted_p99(
     tables: Sequence[TableSpec],
     batch: int,
     plan: Plan,
+    freqs=None,
 ) -> float:
+    """Model-predicted P99 (max per-core time) of a plan; ``freqs`` re-prices
+    it under measured access histograms (how a stale plan is scored against
+    drifted traffic)."""
     sym = dict(zip(plan.symmetric_tables, plan.symmetric_strategies))
-    t = core_times(model, tables, batch, plan.assignments, plan.n_cores, sym)
+    t = core_times(
+        model, tables, batch, plan.assignments, plan.n_cores, sym, freqs
+    )
     return float(t.max()) if len(t) else 0.0
+
+
+def _distribution_meta(freqs, n_tables: int):
+    """JSON-able record of the histograms a plan was priced under."""
+    if freqs is None:
+        return None
+    out = []
+    for i in range(n_tables):
+        f = freq_of(freqs, i)
+        out.append(f.spec() if f is not None and hasattr(f, "spec") else None)
+    return {"per_table": out}
 
 
 # --------------------------------------------------------------------------
@@ -67,8 +108,14 @@ def predicted_p99(
 # --------------------------------------------------------------------------
 
 
-def plan_baseline(workload: Workload, n_cores: int, model: CostModel) -> Plan:
-    """Vendor-compiler analog: GM gathers for everything, batch split."""
+def plan_baseline(
+    workload: Workload, n_cores: int, model: CostModel, *, freqs=None
+) -> Plan:
+    """Vendor-compiler analog: GM gathers for everything, batch split.
+
+    ``freqs`` is accepted for interface parity (recorded in the meta) but
+    cannot change the plan — the baseline has no strategy freedom, which is
+    exactly why it is distribution-sensitive."""
     n = len(workload.tables)
     return Plan(
         workload_name=workload.name,
@@ -76,14 +123,21 @@ def plan_baseline(workload: Workload, n_cores: int, model: CostModel) -> Plan:
         assignments=(),
         symmetric_tables=tuple(range(n)),
         symmetric_strategies=tuple(Strategy.GM for _ in range(n)),
-        meta={"planner": "baseline"},
+        meta={
+            "planner": "baseline",
+            "distribution": _distribution_meta(freqs, n),
+        },
     )
 
 
 def plan_symmetric(
-    workload: Workload, n_cores: int, model: CostModel
+    workload: Workload, n_cores: int, model: CostModel, *, freqs=None
 ) -> Plan:
-    """Paper §III-A greedy: same tables in every core's L1, batch split K-ways."""
+    """Paper §III-A greedy: same tables in every core's L1, batch split K-ways.
+
+    With ``freqs``, strategy picks are priced under the per-table histograms
+    (GM picks pay the conflict surcharge on hot traffic, so hot tables lean
+    harder toward L1/UB)."""
     tables, batch = workload.tables, workload.batch
     order = _paper_order(tables)
     l1_left = model.hardware.l1_bytes
@@ -92,12 +146,14 @@ def plan_symmetric(
         t = tables[i]
         if t.bytes <= l1_left:
             strat, _ = model.best_strategy(
-                t, batch, n_cores, (Strategy.L1, Strategy.L1_UB)
+                t, batch, n_cores, (Strategy.L1, Strategy.L1_UB),
+                freq_of(freqs, i),
             )
             l1_left -= t.bytes
         else:
             strat, _ = model.best_strategy(
-                t, batch, n_cores, (Strategy.GM, Strategy.GM_UB)
+                t, batch, n_cores, (Strategy.GM, Strategy.GM_UB),
+                freq_of(freqs, i),
             )
         strategies[i] = strat
     n = len(tables)
@@ -107,7 +163,11 @@ def plan_symmetric(
         assignments=(),
         symmetric_tables=tuple(range(n)),
         symmetric_strategies=tuple(strategies[i] for i in range(n)),
-        meta={"planner": "symmetric", "l1_left": l1_left},
+        meta={
+            "planner": "symmetric",
+            "l1_left": l1_left,
+            "distribution": _distribution_meta(freqs, n),
+        },
     )
 
 
@@ -123,16 +183,99 @@ class _Item:
     rows: int
     seq: int
     bytes: int
+    # chunk of a frequency-hot-split table: exempt from the symmetric LIF
+    # fallback (replicating a skew-heavy table symmetric GM would stream K x
+    # its bytes and forfeit the L1 promotion the split exists for)
+    hot: bool = False
+
+
+def _hot_window(freq, width: int) -> tuple[int, int]:
+    """Best contiguous id window of ``width`` rows by access mass: slide over
+    the histogram's explicitly-hot ids (two-pointer on the sorted id list) —
+    finds the hot prefix, a relocated hot block, or any hot middle run."""
+    m = freq.rows
+    width = min(width, m)
+    ids = np.sort(np.asarray(freq.ids, np.int64))
+    if len(ids) == 0:
+        return 0, width
+    probs_by_id = dict(zip(freq.ids.tolist(), freq.probs.tolist()))
+    p = np.array([probs_by_id[int(i)] for i in ids])
+    best_lo, best_mass, i, acc = 0, -1.0, 0, 0.0
+    for j in range(len(ids)):
+        acc += p[j]
+        while ids[j] - ids[i] >= width:
+            acc -= p[i]
+            i += 1
+        if acc > best_mass:
+            best_mass = acc
+            best_lo = int(ids[i])
+    lo = max(0, min(best_lo, m - width)) // 8 * 8
+    return lo, min(lo + width, m)
+
+
+def _hot_split(
+    t: TableSpec, batch: int, model: CostModel, freq
+) -> tuple[int, int] | None:
+    """Frequency-aware chunking (DESIGN.md §5): the ``[lo, hi)`` hot window
+    to split into an L1-resident chunk, or ``None`` when not beneficial.
+
+    An oversized table whose hottest L1-sized contiguous id window carries
+    most of the access mass splits at the window: the hot chunk runs
+    L1/L1-UB (conflict-free, serves ~all lookups), the cold remainder stays
+    GM/GM-UB but is nearly idle — the promotion raw size alone would never
+    justify.  Requires block-concentrated histograms (hot-prefix/hot-set
+    generators, or production frequency-ordered row remapping); a scattered
+    or uniform histogram prices the split as useless and returns ``None``."""
+    l1_bytes = model.hardware.l1_bytes
+    h = (l1_bytes // t.row_bytes) // 8 * 8  # L1-capacity rows, aligned
+    if h < 8 or h >= t.rows:
+        return None
+    lo, hi = _hot_window(freq, h)
+    hot_mass = freq.range_mass(lo, hi)
+    if hot_mass < 0.5:
+        return None
+    hot_tab = dataclasses.replace(t, rows=hi - lo)
+    _, hot_cost = model.best_strategy(
+        hot_tab, batch, 1, (Strategy.L1, Strategy.L1_UB), freq, (lo, hi)
+    )
+    cold_cost = sum(
+        model.best_strategy(
+            dataclasses.replace(t, rows=b - a), batch, 1,
+            (Strategy.GM, Strategy.GM_UB), freq, (a, b),
+        )[1]
+        for a, b in ((0, lo), (hi, t.rows))
+        if b > a
+    )
+    _, whole_cost = model.best_strategy(
+        t, batch, 1, (Strategy.GM, Strategy.GM_UB), freq, (0, t.rows)
+    )
+    return (lo, hi) if hot_cost + cold_cost < whole_cost else None
 
 
 def _chunk_items(
-    tables: Sequence[TableSpec], batch: int, model: CostModel
+    tables: Sequence[TableSpec], batch: int, model: CostModel, freqs=None
 ) -> list[_Item]:
     """Paper III-B step 1: split tables larger than L1 into the fewest chunks,
-    but only when the L1 speed-up exceeds the number of chunks."""
+    but only when the L1 speed-up exceeds the number of chunks.  With a
+    frequency histogram, a hot-window split (hot L1 chunk + cold remainder)
+    is tried first — see :func:`_hot_split`."""
     l1_bytes = model.hardware.l1_bytes
     items: list[_Item] = []
     for i, t in enumerate(tables):
+        freq = freq_of(freqs, i)
+        if t.bytes > l1_bytes and l1_bytes > 0 and freq is not None:
+            win = _hot_split(t, batch, model, freq)
+            if win is not None:
+                lo, hi = win
+                for a, b in ((0, lo), (lo, hi), (hi, t.rows)):
+                    if b > a:
+                        items.append(
+                            _Item(
+                                i, a, b - a, t.seq, (b - a) * t.row_bytes,
+                                hot=True,
+                            )
+                        )
+                continue
         if t.bytes > l1_bytes and l1_bytes > 0:
             n_chunks = -(-t.bytes // l1_bytes)
             gm_cost = min(
@@ -168,6 +311,7 @@ def plan_asymmetric(
     max_replicas: int = 4,
     rock_theta: float = 1.1,
     shard_rocks: bool = False,
+    freqs=None,
 ) -> Plan:
     """Paper §III-B greedy asymmetric planner.
 
@@ -176,28 +320,38 @@ def plan_asymmetric(
        ``rock_theta * total_work / K`` (the LPT makespan lower bound) can only
        hurt the makespan when placed on one core — it goes straight to the
        symmetric batch-split group (replication=1 per the paper);
-    1. chunk oversized tables (if the L1 speed-up beats the chunk count);
+    1. chunk oversized tables (if the L1 speed-up beats the chunk count;
+       with ``freqs``, the hot-prefix split is tried first — hot L1 chunk +
+       cold GM remainder, the frequency-aware promotion);
     2. sort (desc seq, asc size) [or LPT with ``lpt=True``];
     3. place each item on the least-loaded core; L1 strategies if that core
-       still has L1 room, else GM strategies;
+       still has L1 room, else GM strategies — all costs priced under
+       ``freqs`` when given (chunk access mass + GM conflict surcharge);
     4. when LIF >= threshold, the remaining tables fall back to symmetric.
+
+    Frequency-aware planning implies LPT ordering: the paper's (desc seq,
+    asc size) key places byte-tiny tables first, letting them claim the L1
+    budget before the mass-heavy hot chunks even arrive — under a histogram
+    the placement order must follow priced cost, not raw size.
     """
     tables, batch = workload.tables, workload.batch
+    lpt = lpt or freqs is not None
 
-    def best_single_core(t: TableSpec) -> float:
+    def best_single_core(i: int, t: TableSpec) -> float:
         cands = [Strategy.GM, Strategy.GM_UB]
         if model.fits_l1(t):
             cands += [Strategy.L1, Strategy.L1_UB]
-        return min(model.predict(t, batch, 1, s) for s in cands)
+        f = freq_of(freqs, i)
+        return min(model.predict(t, batch, 1, s, f) for s in cands)
 
     pre_sym: list[int] = []
     rock_chunks: list[ChunkAssignment] = []
     if rock_theta is not None and n_cores > 1:
-        costs = [best_single_core(t) for t in tables]
+        costs = [best_single_core(i, t) for i, t in enumerate(tables)]
         bound = rock_theta * sum(costs) / n_cores
         chunkable = {
             it.table_idx
-            for it in _chunk_items(tables, batch, model)
+            for it in _chunk_items(tables, batch, model, freqs)
             if it.rows < tables[it.table_idx].rows
         }
         pre_sym = [
@@ -221,6 +375,7 @@ def plan_asymmetric(
                     strat, _ = model.best_strategy(
                         dataclasses.replace(t, rows=r), batch, 1,
                         (Strategy.GM, Strategy.GM_UB),
+                        freq_of(freqs, i), (off, off + r),
                     )
                     rock_chunks.append(
                         ChunkAssignment(i, core % n_cores, off, r, strat)
@@ -236,7 +391,10 @@ def plan_asymmetric(
         batch=batch,
     )
     idx_map = [i for i in range(len(tables)) if i not in placed_elsewhere]
-    items = _chunk_items(reduced.tables, batch, model)
+    reduced_freqs = (
+        [freq_of(freqs, i) for i in idx_map] if freqs is not None else None
+    )
+    items = _chunk_items(reduced.tables, batch, model, reduced_freqs)
     # re-map chunk items back to original table indices
     for it in items:
         it.table_idx = idx_map[it.table_idx]
@@ -248,6 +406,8 @@ def plan_asymmetric(
                     batch,
                     1,
                     s,
+                    freq_of(freqs, it.table_idx),
+                    (it.row_offset, it.row_offset + it.rows),
                 )
                 for s in (Strategy.L1, Strategy.L1_UB, Strategy.GM, Strategy.GM_UB)
             )
@@ -264,6 +424,8 @@ def plan_asymmetric(
         load[a.core] += model.predict(
             dataclasses.replace(tables[a.table_idx], rows=a.rows),
             batch, 1, a.strategy,
+            freq_of(freqs, a.table_idx),
+            (a.row_offset, a.row_offset + a.rows),
         )
     def _sym_candidates(t: TableSpec):
         cands = [Strategy.GM, Strategy.GM_UB]
@@ -273,7 +435,10 @@ def plan_asymmetric(
 
     sym_tables: list[int] = list(pre_sym)
     sym_strats: list[Strategy] = [
-        model.best_strategy(tables[i], batch, n_cores, _sym_candidates(tables[i]))[0]
+        model.best_strategy(
+            tables[i], batch, n_cores, _sym_candidates(tables[i]),
+            freq_of(freqs, i),
+        )[0]
         for i in pre_sym
     ]
     fell_back = False
@@ -294,13 +459,15 @@ def plan_asymmetric(
             fell_back = True
         if fell_back:
             # whole tables only — chunks of an already-started table must be
-            # completed asymmetrically to preserve coverage.
+            # completed asymmetrically to preserve coverage, and hot-split
+            # chunks always place asymmetrically (see _Item.hot).
             started = {a.table_idx for a in assignments}
-            if it.table_idx not in started:
+            if it.table_idx not in started and not it.hot:
                 if it.table_idx not in sym_tables:
                     t = tables[it.table_idx]
                     strat, _ = model.best_strategy(
-                        t, batch, n_cores, (Strategy.GM, Strategy.GM_UB)
+                        t, batch, n_cores, (Strategy.GM, Strategy.GM_UB),
+                        freq_of(freqs, it.table_idx),
                     )
                     sym_tables.append(it.table_idx)
                     sym_strats.append(strat)
@@ -308,13 +475,17 @@ def plan_asymmetric(
 
         core = int(np.argmin(load))
         chunk_tab = dataclasses.replace(tables[it.table_idx], rows=it.rows)
+        it_freq = freq_of(freqs, it.table_idx)
+        it_range = (it.row_offset, it.row_offset + it.rows)
         if it.bytes <= l1_left[core]:
             strat, cost = model.best_strategy(
-                chunk_tab, batch, 1, (Strategy.L1, Strategy.L1_UB)
+                chunk_tab, batch, 1, (Strategy.L1, Strategy.L1_UB),
+                it_freq, it_range,
             )
         else:
             strat, cost = model.best_strategy(
-                chunk_tab, batch, 1, (Strategy.GM, Strategy.GM_UB)
+                chunk_tab, batch, 1, (Strategy.GM, Strategy.GM_UB),
+                it_freq, it_range,
             )
 
         replicas = 1
@@ -343,12 +514,14 @@ def plan_asymmetric(
                 c = int(np.argmin(load))
                 if it.bytes <= l1_left[c]:
                     strat_r, rep_cost = model.best_strategy(
-                        chunk_tab, rep_batch, 1, (Strategy.L1, Strategy.L1_UB)
+                        chunk_tab, rep_batch, 1, (Strategy.L1, Strategy.L1_UB),
+                        it_freq, it_range,
                     )
                     l1_left[c] -= it.bytes
                 else:
                     strat_r, rep_cost = model.best_strategy(
-                        chunk_tab, rep_batch, 1, (Strategy.GM, Strategy.GM_UB)
+                        chunk_tab, rep_batch, 1, (Strategy.GM, Strategy.GM_UB),
+                        it_freq, it_range,
                     )
                 assignments.append(
                     ChunkAssignment(
@@ -370,9 +543,11 @@ def plan_asymmetric(
         symmetric_strategies=tuple(sym_strats),
         meta={
             "planner": "asymmetric" + ("+lpt" if lpt else "")
-            + ("+rep" if replicate_hot else ""),
+            + ("+rep" if replicate_hot else "")
+            + ("+freq" if freqs is not None else ""),
             "lif": float(lif(load)) if load.sum() else 1.0,
             "fell_back": fell_back,
+            "distribution": _distribution_meta(freqs, len(tables)),
         },
     )
     plan.validate(tables)

@@ -21,10 +21,17 @@ per executed batch.
 """
 from __future__ import annotations
 
+from typing import Sequence
+
 import numpy as np
 
+from repro.core.cost_model import freq_of
 from repro.core.partition import PackedPlan
+from repro.core.strategies import Plan, Strategy
+from repro.core.tables import TableSpec
 from repro.kernels.embedding_multi import ragged_block_b
+
+__all__ = ["modeled_hbm_traffic", "modeled_plan_traffic"]
 
 
 def modeled_hbm_traffic(
@@ -120,4 +127,70 @@ def modeled_hbm_traffic(
         "seq": seq,
         "paths": paths,
         "rejoin": rejoin,
+    }
+
+
+def modeled_plan_traffic(
+    plan: Plan,
+    tables: Sequence[TableSpec],
+    batch: int,
+    freqs=None,
+) -> dict:
+    """Expected per-batch HBM *lookup* bytes of a placement under an access
+    histogram (DESIGN.md §5) — the drift benchmark's deterministic metric.
+
+    Per chunk: the expected lookups landing in it are ``B·s·mass`` where
+    ``mass`` is the chunk's share of the table's access mass
+    (``freq.range_mass``; uniform ``rows/m`` when no histogram is given).
+
+    * ``GM``     — every landing lookup streams one row from HBM;
+    * ``GM-UB``  — the chunk is streamed HBM→VMEM once per batch regardless
+      of where lookups land;
+    * ``L1``/``L1-UB`` — resident in the persistent buffer: zero steady-state
+      HBM bytes (the promotion payoff).
+
+    A frequency-aware plan that pins the hot slice in L1 collapses this
+    figure under skew; a stale plan whose L1 slice went cold pays the full
+    GM bill again.  Symmetric-group tables are priced the same way over the
+    whole table (UB streams once per core since every core sweeps its own
+    replica of the table)."""
+    total = 0.0
+    per_table = [0.0] * len(tables)
+    l1_bytes = 0
+    for a in plan.assignments:
+        t = tables[a.table_idx]
+        f = freq_of(freqs, a.table_idx)
+        mass = (
+            f.range_mass(a.row_offset, a.row_offset + a.rows)
+            if f is not None
+            else a.rows / max(t.rows, 1)
+        )
+        # replicas split the batch; per-assignment share keeps the total exact
+        eff_batch = batch // max(a.replicas, 1)
+        if a.strategy is Strategy.GM:
+            b = eff_batch * t.seq * mass * t.row_bytes
+        elif a.strategy is Strategy.GM_UB:
+            b = a.rows * t.row_bytes
+        else:  # L1 / L1-UB resident
+            b = 0.0
+            l1_bytes += a.rows * t.row_bytes
+        total += b
+        per_table[a.table_idx] += b
+    n_cores = max(plan.n_cores, 1)
+    for ti, strat in zip(plan.symmetric_tables, plan.symmetric_strategies):
+        t = tables[ti]
+        if strat is Strategy.GM:
+            b = batch * t.seq * t.row_bytes
+        elif strat is Strategy.GM_UB:
+            b = n_cores * t.rows * t.row_bytes
+        else:
+            b = 0.0
+            l1_bytes += t.rows * t.row_bytes
+        total += b
+        per_table[ti] += b
+    return {
+        "batch": int(batch),
+        "hbm_lookup_bytes": int(total),
+        "per_table_bytes": [int(b) for b in per_table],
+        "l1_resident_bytes": int(l1_bytes),
     }

@@ -6,6 +6,19 @@
 Runs the paper's serving pipeline end-to-end on the local device set:
 plan -> pack -> batched queries through the partitioned executor, reporting
 P99 latency + throughput per query distribution.
+
+Distribution-drift mode (DESIGN.md §5):
+
+    PYTHONPATH=src python -m repro.launch.serve --workload smoke \
+        --batch 128 --queries 4096 --drift flip --replan
+
+``--distribution`` accepts the legacy names (uniform/real/fixed/all) plus
+``zipf:<alpha>``, ``hotset:<frac>:<mass>[:<offset>]``, and the per-workload
+preset names; ``--drift`` takes a phase schedule spec (``flip`` = the
+uniform -> zipf-1.2 -> hot-set-flip matrix) and routes traffic through the
+:class:`repro.serving.server.Server`; ``--replan`` arms the online drift
+trigger + shadow re-pack + parity-checked hot swap, with replan counters
+reported from ``Server.stats()``.
 """
 from __future__ import annotations
 
@@ -18,10 +31,23 @@ import numpy as np
 from repro import compat
 from repro.core import PartitionedEmbeddingBag, analytic_model
 from repro.core.cost_model import TPU_V5E
+from repro.data import distributions as dist_lib
 from repro.data.synthetic import ctr_batch
 from repro.data.workloads import WORKLOADS, get_workload, small_workload
 from repro.models.dlrm import DLRMConfig, forward_packed, init_dlrm
 from repro.serving.latency import LatencyTracker
+from repro.serving.server import DriftConfig, Server
+
+
+def _resolve_dists(spec: str) -> list[tuple[str, object]]:
+    """CLI --distribution -> [(label, Distribution)]."""
+    if spec == "all":
+        return [
+            ("uniform", dist_lib.Uniform()),
+            ("real", dist_lib.Zipf(1.05, hot_prefix=False)),
+            ("fixed", dist_lib.Fixed()),
+        ]
+    return [(spec, dist_lib.get_distribution(spec))]
 
 
 def main(argv=None):
@@ -33,7 +59,17 @@ def main(argv=None):
     p.add_argument("--batch", type=int, default=256)
     p.add_argument("--queries", type=int, default=2048)
     p.add_argument("--distribution", default="real",
-                   choices=["uniform", "real", "fixed", "all"])
+                   help="uniform | real | fixed | all | zipf:<a> | "
+                        "hotset:<frac>:<mass>[:<off>] | <workload preset>")
+    p.add_argument("--drift", default=None,
+                   help="drift schedule spec routed through the Server, "
+                        "e.g. 'flip' or 'uniform@8,zipf:1.2@8,"
+                        "hotset:0.01:0.9:-1@8'")
+    p.add_argument("--replan", action="store_true",
+                   help="online replanning: frequency sketch + drift trigger "
+                        "+ shadow re-pack + parity-checked hot swap")
+    p.add_argument("--replan-threshold", type=float, default=0.2,
+                   help="drift distance that counts as a strike")
     p.add_argument("--layout", default="ragged", choices=["ragged", "dense"],
                    help="packed chunk layout for the asymmetric executor")
     p.add_argument("--kernels", default="fused", choices=["fused", "xla"],
@@ -53,41 +89,98 @@ def main(argv=None):
     n_dev = jax.device_count()
     mesh = compat.make_mesh((1, n_dev), ("data", "model"))
     model = analytic_model(TPU_V5E)
-    bag = PartitionedEmbeddingBag(
-        wl, n_cores=n_dev, planner=args.planner, cost_model=model,
-        planner_kwargs=dict(shard_rocks=True) if args.planner == "asymmetric" else {},
-        layout=args.layout,
-    )
-    print(f"[serve] {wl.summary()}")
-    print(f"[serve] plan: {len(bag.plan.assignments)} chunks, "
-          f"{len(bag.plan.symmetric_tables)} symmetric, {n_dev} devices")
-    params = init_dlrm(cfg, jax.random.PRNGKey(0))
-    packed = bag.pack(params["tables"], autotune=args.autotune)
-    lay = bag.layout_summary()
-    if lay:
-        print(f"[serve] layout={lay['kind']} chunk_bytes={lay['chunk_bytes']:,} "
-              f"(dense would be {lay['dense_bytes']:,}; "
-              f"{lay['bytes_vs_dense']:.2%} of dense, "
-              f"padding_frac={lay['padding_frac']:.2%})")
-    tuning = bag.plan.meta.get("tuning")
-    if args.autotune and tuning and tuning.get("best"):
-        best = tuning["best"]
-        print(f"[serve] autotuned block_r={best['block_r']} "
-              f"block_b={best['block_b'] or 'auto'} "
-              f"({len(tuning['candidates'])} candidates, "
-              f"backend={tuning['backend']})")
     use_kernels = "fused" if args.kernels == "fused" else False
-    print(f"[serve] executor kernels={args.kernels} reduce={args.reduce}")
+    params = init_dlrm(cfg, jax.random.PRNGKey(0))
+
+    # size "flip"-style default phases to a third of the run so every phase
+    # is actually visited (explicit "@N" specs override per phase)
+    n_batches = max(args.queries // args.batch, 1)
+    schedule = (
+        dist_lib.parse_drift(args.drift, phase_batches=max(n_batches // 3, 1))
+        if args.drift else None
+    )
+    if schedule is None:
+        resolved = _resolve_dists(args.distribution)[0][1]
+        if isinstance(resolved, dist_lib.DriftSchedule):
+            # a preset that is itself day-parted (e.g. huawei-25mb) routes
+            # through the drift serving loop like an explicit --drift spec
+            schedule = resolved
+    dist0 = schedule.at(0) if schedule else resolved
+    freqs0 = dist_lib.workload_probs(wl, dist0)
+
+    def make_bag(freqs):
+        kwargs = (dict(shard_rocks=True) if args.planner == "asymmetric"
+                  else {})
+        if freqs is not None:
+            kwargs["freqs"] = freqs
+        return PartitionedEmbeddingBag(
+            wl, n_cores=n_dev, planner=args.planner, cost_model=model,
+            planner_kwargs=kwargs, layout=args.layout,
+        )
+
+    def make_step(freqs):
+        """(Re)plan + pack + compile one serving step — the shadow re-pack
+        path the drift trigger invokes off the old plan's hot path."""
+        bag = make_bag(freqs)
+        packed = bag.pack(params["tables"], autotune=args.autotune)
+
+        @jax.jit
+        def infer(batch):
+            return forward_packed(cfg, bag, packed, params, batch, mesh=mesh,
+                                  use_kernels=use_kernels,
+                                  reduce_mode=args.reduce)
+
+        def step(payloads):
+            dense = jax.numpy.stack([q["dense"] for q in payloads])
+            idx = jax.numpy.stack([q["indices"] for q in payloads], axis=1)
+            return np.asarray(
+                jax.block_until_ready(infer({"dense": dense, "indices": idx}))
+            )
+
+        step.bag = bag
+        return step
+
+    def print_plan(bag):
+        print(f"[serve] {wl.summary()}")
+        print(f"[serve] plan: {len(bag.plan.assignments)} chunks, "
+              f"{len(bag.plan.symmetric_tables)} symmetric, {n_dev} devices, "
+              f"planner={bag.plan.meta['planner']}")
+        lay = bag.layout_summary()
+        if lay:
+            print(f"[serve] layout={lay['kind']} "
+                  f"chunk_bytes={lay['chunk_bytes']:,} "
+                  f"(dense would be {lay['dense_bytes']:,}; "
+                  f"{lay['bytes_vs_dense']:.2%} of dense, "
+                  f"padding_frac={lay['padding_frac']:.2%})")
+        tuning = bag.plan.meta.get("tuning")
+        if args.autotune and tuning and tuning.get("best"):
+            best = tuning["best"]
+            print(f"[serve] autotuned block_r={best['block_r']} "
+                  f"block_b={best['block_b'] or 'auto'} "
+                  f"({len(tuning['candidates'])} candidates, "
+                  f"backend={tuning['backend']})")
+        print(f"[serve] executor kernels={args.kernels} reduce={args.reduce}")
+
+    if schedule is not None or args.replan:
+        # plan + pack happen exactly once, inside make_step (the same path
+        # the drift trigger's shadow re-pack uses)
+        step0 = make_step(freqs0)
+        print_plan(step0.bag)
+        _serve_drift(args, wl, schedule or dist_lib.DriftSchedule(
+            [(1, dist0)], cycle=True), freqs0, make_step, step0)
+        return
+
+    bag = make_bag(freqs0)
+    packed = bag.pack(params["tables"], autotune=args.autotune)
+    print_plan(bag)
 
     @jax.jit
     def infer(batch):
         return forward_packed(cfg, bag, packed, params, batch, mesh=mesh,
                               use_kernels=use_kernels, reduce_mode=args.reduce)
 
-    dists = (["uniform", "real", "fixed"] if args.distribution == "all"
-             else [args.distribution])
     rng = np.random.default_rng(0)
-    for dist in dists:
+    for label, dist in _resolve_dists(args.distribution):
         tracker = LatencyTracker()
         for i in range(max(args.queries // args.batch, 1)):
             b = ctr_batch(rng, wl, distribution=dist, batch=args.batch)
@@ -96,8 +189,54 @@ def main(argv=None):
             jax.block_until_ready(infer(batch))
             tracker.record(time.perf_counter() - t0, queries=args.batch)
         s = tracker.summary()
-        print(f"[serve] dist={dist:8s} p50={s['p50_us']:9.0f}us "
+        print(f"[serve] dist={label:8s} p50={s['p50_us']:9.0f}us "
               f"p99={s['p99_us']:9.0f}us tps={s['tps']:9.0f}")
+
+
+def _serve_drift(args, wl, schedule, freqs0, make_step, step0):
+    """Drive the Server through the drift schedule (optionally replanning)."""
+    drift_cfg = None
+    if args.replan:
+        drift_cfg = DriftConfig(
+            baseline=freqs0,
+            extract_indices=lambda payloads: np.stack(
+                [np.asarray(q["indices"]) for q in payloads], axis=1
+            ),
+            replan=lambda measured: make_step(measured),
+            threshold=args.replan_threshold,
+            check_every=4,
+            patience=2,
+            cooldown=8,
+        )
+    srv = Server(
+        step0,
+        max_batch=args.batch,
+        max_wait_s=0.0,
+        layout=dict(step0.bag.layout_summary()),
+        exec_mode={"use_kernels": args.kernels, "reduce_mode": args.reduce},
+        drift=drift_cfg,
+    )
+    rng = np.random.default_rng(0)
+    n_batches = max(args.queries // args.batch, 1)
+    for b in range(n_batches):
+        dist = schedule.at(b)
+        idx = dist_lib.sample_workload(rng, wl, dist, args.batch)
+        dense = rng.standard_normal((args.batch, 13)).astype(np.float32)
+        for q in range(args.batch):
+            srv.submit({"dense": dense[q], "indices": idx[:, q]})
+        srv.pump()
+    srv.drain()
+    s = srv.stats()
+    line = (f"[serve] drift p50={s['p50_us']:9.0f}us p99={s['p99_us']:9.0f}us "
+            f"tps={s['tps']:9.0f}")
+    if "replan" in s:
+        r = s["replan"]
+        line += (f" replans={r['replans']} parity_failures="
+                 f"{r['parity_failures']} last_drift={r['last_drift']:.3f}")
+    print(line)
+    for ev in s.get("replan", {}).get("events", []):
+        print(f"[serve]   replan@batch={ev['batch']} drift={ev['drift']:.3f} "
+              f"parity_ok={ev['parity_ok']}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Batched serving with SLA tracking and hedged straggler mitigation.
+"""Batched serving with SLA tracking, hedged stragglers, and drift replanning.
 
 A deployment-shaped serving layer exercised at CPU scale:
 
@@ -8,17 +8,35 @@ A deployment-shaped serving layer exercised at CPU scale:
 * ``Server`` — runs a jitted step over released batches, records latencies;
 * hedged requests — if a batch's execution exceeds ``hedge_factor`` x the
   median, a backup execution is launched (simulated duplicate here) and the
-  faster result wins: classic tail-taming for stragglers.
+  faster result wins: classic tail-taming for stragglers;
+* drift replanning (``DriftConfig``, DESIGN.md §5) — a streaming frequency
+  sketch over the served index streams, a hysteresis drift trigger against
+  the histogram the live plan was priced under, shadow re-pack off the hot
+  path, and an atomic plan hot-swap gated on one-batch old/new parity.
+
+The replanning state machine per served batch:
+
+    serve -> sketch.update -> [every check_every batches]
+      drift < threshold        -> strikes = 0                (stationary)
+      drift >= threshold       -> strikes += 1               (hysteresis)
+      strikes >= patience      -> shadow = replan(measured)  (off hot path)
+                                  parity(old, shadow) on this batch
+                                  ok  -> step_fn = shadow    (atomic swap)
+                                         baseline = measured; cooldown
+                                  bad -> keep old plan; count parity_failure
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro.data.distributions import FrequencySketch, drift_distance
 from repro.serving.latency import LatencyTracker
+
+__all__ = ["Query", "Batcher", "DriftConfig", "Server"]
 
 
 @dataclasses.dataclass
@@ -49,6 +67,52 @@ class Batcher:
         return None
 
 
+@dataclasses.dataclass
+class DriftConfig:
+    """Online-replanning configuration for :class:`Server`.
+
+    ``baseline`` — per-table ``RowProbs`` the live plan was priced under
+    (``None`` entries mean the uniform assumption for that table).
+    ``extract_indices`` — payload list -> stacked (N, B, s) int32 index array
+    (``-1`` padding ignored), so the sketch sees the actual served lookups.
+    ``replan`` — measured per-table ``RowProbs`` -> a *new step_fn*: the
+    shadow re-pack (plan + pack + compile) runs inside this callable, off
+    the pump's hot path from the old plan's point of view — the old plan
+    keeps serving until the swap.
+
+    ``metric`` — ``"topmass"`` (default): the sample-robust
+    :func:`repro.data.distributions.drift_distance`; ``"l1"``: raw exact L1
+    distance (the textbook trigger — beware its finite-sample bias on large
+    sparse tables, see the drift_distance docstring).  The trigger fires
+    after ``patience`` consecutive over-threshold checks (hysteresis: one
+    noisy window never replans) and then rests for ``cooldown`` batches.
+    """
+
+    baseline: Sequence[Any]
+    extract_indices: Callable[[list[Any]], np.ndarray]
+    replan: Callable[[list[Any]], Callable[[list[Any]], Any]]
+    check_every: int = 8
+    threshold: float = 0.2
+    patience: int = 2
+    cooldown: int = 32
+    sketch_capacity: int = 4096
+    metric: str = "topmass"
+    parity_rtol: float = 1e-4
+    parity_atol: float = 1e-5
+
+
+def _tree_allclose(a, b, rtol: float, atol: float) -> bool:
+    if isinstance(a, dict) and isinstance(b, dict):
+        return set(a) == set(b) and all(
+            _tree_allclose(a[k], b[k], rtol, atol) for k in a
+        )
+    if isinstance(a, (list, tuple)) and isinstance(b, (list, tuple)):
+        return len(a) == len(b) and all(
+            _tree_allclose(x, y, rtol, atol) for x, y in zip(a, b)
+        )
+    return np.allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
 class Server:
     def __init__(
         self,
@@ -60,6 +124,7 @@ class Server:
         n_replicas: int = 2,
         layout: dict | None = None,
         exec_mode: dict | None = None,
+        drift: DriftConfig | None = None,
     ):
         self.step_fn = step_fn
         self.batcher = Batcher(max_batch, max_wait_s)
@@ -75,6 +140,27 @@ class Server:
         # deployment-level record of which data-flow path served the traffic.
         self.exec_mode = dict(exec_mode) if exec_mode else {
             "use_kernels": "fused", "reduce_mode": "sparse"}
+        # drift replanning state
+        self.drift = drift
+        self.replans = 0
+        self.parity_failures = 0
+        self.replan_events: list[dict] = []
+        self.last_drift = 0.0
+        self.drift_checks = 0
+        self._baseline = list(drift.baseline) if drift else []
+        self._sketches: list[FrequencySketch | None] = (
+            [
+                FrequencySketch(b.rows, drift.sketch_capacity)
+                if b is not None
+                else None
+                for b in self._baseline
+            ]
+            if drift
+            else []
+        )
+        self._batches_served = 0
+        self._strikes = 0
+        self._rest_until = 0
 
     def submit(self, payload: Any) -> None:
         self.batcher.submit(payload)
@@ -84,8 +170,9 @@ class Server:
         batch = self.batcher.maybe_release()
         if batch is None:
             return None
+        payloads = [q.payload for q in batch]
         t0 = time.perf_counter()
-        out = self.step_fn([q.payload for q in batch])
+        out = self.step_fn(payloads)
         dt = time.perf_counter() - t0
         # hedging: a straggling execution is retried on a backup replica; we
         # model the win as the median execution time (the backup is healthy).
@@ -100,7 +187,68 @@ class Server:
         now = time.perf_counter()
         for q in batch:
             self.tracker.record(now - q.t_enqueue, queries=1)
+        if self.drift is not None:
+            self._observe(payloads, out)
         return out
+
+    # -- drift replanning ---------------------------------------------------
+
+    def _observe(self, payloads: list[Any], out: Any) -> None:
+        """Feed the served batch to the sketches; maybe trigger a hot-swap."""
+        d = self.drift
+        idx = np.asarray(d.extract_indices(payloads))
+        for i, sk in enumerate(self._sketches):
+            if sk is not None and i < idx.shape[0]:
+                sk.update(idx[i])
+        self._batches_served += 1
+        if self._batches_served % d.check_every:
+            return
+        if self._batches_served < self._rest_until:
+            return
+        measured = [sk.to_probs() if sk else None for sk in self._sketches]
+        self.last_drift = self._distance(measured)
+        self.drift_checks += 1
+        if self.last_drift >= d.threshold:
+            self._strikes += 1
+        else:
+            self._strikes = 0
+        if self._strikes < d.patience:
+            return
+        self._strikes = 0
+        self._rest_until = self._batches_served + d.cooldown
+        # shadow re-pack: the new plan is built + compiled while the old
+        # step_fn remains live; only after parity does the swap happen.
+        shadow = d.replan(measured)
+        shadow_out = shadow(payloads)
+        ok = _tree_allclose(out, shadow_out, d.parity_rtol, d.parity_atol)
+        self.replan_events.append(
+            {
+                "batch": self._batches_served,
+                "drift": float(self.last_drift),
+                "parity_ok": bool(ok),
+            }
+        )
+        if not ok:
+            self.parity_failures += 1
+            return
+        self.step_fn = shadow  # atomic cut-over
+        self.replans += 1
+        self._baseline = measured
+        for sk in self._sketches:
+            if sk is not None:
+                sk.reset()
+
+    def _distance(self, measured: list[Any]) -> float:
+        d = self.drift
+        worst = 0.0
+        for m, b in zip(measured, self._baseline):
+            if m is None or b is None or m.rows != b.rows:
+                continue
+            if d.metric == "l1":
+                worst = max(worst, 0.5 * b.l1_distance(m))
+            else:
+                worst = max(worst, drift_distance(m, b))
+        return worst
 
     def drain(self, max_iters: int = 10_000) -> None:
         it = 0
@@ -114,4 +262,14 @@ class Server:
         if self.layout:
             s["layout"] = dict(self.layout)
         s["exec_mode"] = dict(self.exec_mode)
+        if self.drift is not None:
+            s["replan"] = {
+                "replans": self.replans,
+                "parity_failures": self.parity_failures,
+                "drift_checks": self.drift_checks,
+                "last_drift": float(self.last_drift),
+                "threshold": self.drift.threshold,
+                "metric": self.drift.metric,
+                "events": list(self.replan_events),
+            }
         return s

@@ -1,0 +1,309 @@
+"""Query-distribution engine tests (DESIGN.md §5).
+
+Covers: generator/histogram exactness, RowProbs mass queries, drift metrics
+(stationary vs drifted separation), the frequency sketch, schedules/presets,
+frequency-aware cost-model pricing, and the planner's hot-window L1/UB
+promotion that the uniform assumption would never make.
+"""
+import collections
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import analytic_model, modeled_plan_traffic
+from repro.core.cost_model import TPU_V5E
+from repro.core.planner import plan_asymmetric, predicted_p99
+from repro.core.strategies import Strategy
+from repro.core.tables import TableSpec, make_workload
+from repro.data import synthetic
+from repro.data.distributions import (
+    PRESETS,
+    DriftSchedule,
+    Fixed,
+    FrequencySketch,
+    HotSet,
+    RowProbs,
+    Uniform,
+    Zipf,
+    drift_distance,
+    empirical_probs,
+    get_distribution,
+    parse_drift,
+    sample_workload,
+    workload_probs,
+)
+from repro.data.workloads import WORKLOADS, small_workload
+
+T = TableSpec("t", rows=50_000, dim=16, seq=2)
+ALL_DISTS = [
+    Uniform(),
+    Fixed(7),
+    Zipf(1.2),
+    Zipf(1.6, hot_prefix=False),
+    HotSet(0.01, 0.9),
+    HotSet(0.01, 0.9).flip(),
+]
+
+
+# ------------------------------------------------------------- histograms
+
+
+@pytest.mark.parametrize("dist", ALL_DISTS, ids=lambda d: repr(d)[:30])
+def test_probs_normalized_and_in_range(dist):
+    rp = dist.probs(T)
+    assert abs(float(rp.probs.sum()) + rp.tail - 1.0) < 1e-9
+    assert rp.ids.min(initial=0) >= 0
+    assert rp.ids.max(initial=0) < T.rows
+    # probs are rank-sorted descending
+    assert (np.diff(rp.probs) <= 1e-15).all()
+
+
+@pytest.mark.parametrize("dist", ALL_DISTS, ids=lambda d: repr(d)[:30])
+def test_sampler_within_table_and_matches_histogram(dist):
+    rng = np.random.default_rng(0)
+    idx = dist.sample(rng, T, 8192)
+    assert idx.shape == (8192, T.seq)
+    assert idx.min() >= 0 and idx.max() < T.rows
+    # the sampler draws from the same histogram probs() reports: large-sample
+    # empirical mass over the analytic hot ids converges (rank-ordered
+    # top_mass of an empirical histogram is upward-biased on sparse uniform
+    # samples, so compare mass at the *analytic* hot ids instead)
+    emp = empirical_probs(idx, T.rows)
+    rp = dist.probs(T)
+    for k in (1, 64, 1024):
+        ids = rp.ids[: min(k, len(rp.ids))]
+        if len(ids):
+            assert emp.mass_of_ids(ids) == pytest.approx(
+                rp.mass_of_ids(ids), abs=0.05
+            )
+    assert drift_distance(emp, rp) < 0.15
+
+
+def test_empirical_histogram_exact_counts():
+    """empirical_probs counts the stream exactly (vs a naive Counter)."""
+    rng = np.random.default_rng(1)
+    idx = rng.integers(-1, 100, (64, 3))  # includes -1 padding
+    rp = empirical_probs(idx, rows=100)
+    counter = collections.Counter(int(v) for v in idx.ravel() if v >= 0)
+    total = sum(counter.values())
+    assert rp.tail == pytest.approx(0.0, abs=1e-12)
+    for i, p in zip(rp.ids, rp.probs):
+        assert p == pytest.approx(counter[int(i)] / total)
+    assert len(rp.ids) == len(counter)
+
+
+def test_rowprobs_mass_queries():
+    u = RowProbs.uniform(1000)
+    assert u.prefix_mass(100) == pytest.approx(0.1)
+    assert u.range_mass(500, 600) == pytest.approx(0.1)
+    assert u.effective_rows(0.99) == 990
+    h = HotSet(n_hot=10, hot_frac=0.0, hot_mass=0.9, offset=100).probs(
+        TableSpec("x", rows=1000, dim=16)
+    )
+    assert h.range_mass(100, 110) == pytest.approx(0.9)
+    assert h.range_mass(0, 100) == pytest.approx(0.1 * 100 / 990)
+    assert h.effective_rows(0.9) == 10
+    # zipf hot-prefix concentrates mass at low ids; scattered does not
+    zp = Zipf(1.4).probs(T)
+    zs = Zipf(1.4, hot_prefix=False).probs(T)
+    assert zp.prefix_mass(1024) > 0.8
+    assert zs.prefix_mass(1024) < 0.3
+    assert zp.effective_rows(0.5) == zs.effective_rows(0.5)  # rank-identical
+
+
+def test_l1_distance_properties():
+    a = Zipf(1.2).probs(T)
+    assert a.l1_distance(a) == pytest.approx(0.0, abs=1e-9)
+    h1 = HotSet(0.01, 0.9).probs(T)
+    h2 = HotSet(0.01, 0.9).flip().probs(T)
+    d = h1.l1_distance(h2)
+    assert 1.5 < d <= 2.0  # disjoint hot blocks: nearly total variation 2
+    with pytest.raises(ValueError):
+        a.l1_distance(RowProbs.uniform(10))
+
+
+# ----------------------------------------------------------- drift metric
+
+
+def test_drift_distance_stationary_vs_drifted():
+    """The serving trigger's core property: sparse-sample noise on
+    stationary traffic stays well below genuine distribution drift."""
+    rng = np.random.default_rng(2)
+    stationary, drifted = [], []
+    for dist in (Uniform(), Zipf(1.2), HotSet(0.01, 0.9)):
+        base = dist.probs(T)
+        emp = empirical_probs(dist.sample(rng, T, 1024), T.rows)
+        stationary.append(drift_distance(emp, base))
+    pairs = [
+        (Zipf(1.2), Uniform()),
+        (Uniform(), Zipf(1.2)),
+        (HotSet(0.01, 0.9).flip(), HotSet(0.01, 0.9)),
+    ]
+    for gen, assumed in pairs:
+        emp = empirical_probs(gen.sample(rng, T, 1024), T.rows)
+        drifted.append(drift_distance(emp, assumed.probs(T)))
+    assert max(stationary) < 0.2, stationary
+    assert min(drifted) > 0.3, drifted
+
+
+def test_sketch_exact_under_capacity_and_bounded_over():
+    rng = np.random.default_rng(3)
+    idx = rng.integers(0, 200, 5000)
+    sk = FrequencySketch(rows=200, capacity=256)
+    sk.update(idx)
+    exact = empirical_probs(idx, 200)
+    got = sk.to_probs()
+    assert got.l1_distance(exact) == pytest.approx(0.0, abs=1e-9)
+    assert sk.total == 5000
+    # over capacity: bounded memory, hot ids still dominate
+    big = FrequencySketch(rows=1_000_000, capacity=64)
+    stream = Zipf(2.0).sample(rng, TableSpec("b", rows=1_000_000, dim=16), 4096)
+    big.update(stream)
+    assert len(big.counts) <= 64
+    assert big.to_probs().top_mass(8) > 0.5
+
+
+def test_schedules_and_presets():
+    sch = DriftSchedule([(4, Uniform()), (4, Zipf(1.2))])
+    assert isinstance(sch.at(0), Uniform)
+    assert isinstance(sch.at(4), Zipf)
+    assert isinstance(sch.at(9), Uniform)  # cycles: 9 % 8 = 1 -> phase 0
+    assert isinstance(sch.at(13), Zipf)  # 13 % 8 = 5 -> phase 1
+    assert sch.phase_index(9) == 0
+    flip = parse_drift("flip", phase_batches=8)
+    assert flip.period == 24 and not flip.cycle
+    assert [type(flip.at(i)).__name__ for i in (0, 8, 16)] == [
+        "Uniform", "Zipf", "HotSet"]
+    assert set(PRESETS) == set(WORKLOADS)
+    assert isinstance(get_distribution("zipf:1.5"), Zipf)
+    assert get_distribution("zipf:1.5").alpha == 1.5
+    hs = get_distribution("hotset:0.02:0.8:-1")
+    assert (hs.hot_frac, hs.hot_mass, hs.offset) == (0.02, 0.8, -1)
+    with pytest.raises(ValueError):
+        get_distribution("nope")
+
+
+def test_sample_workload_shapes_and_padding():
+    wl = small_workload(batch=16)
+    idx = sample_workload(np.random.default_rng(0), wl, Zipf(1.2))
+    s_max = max(t.seq for t in wl.tables)
+    assert idx.shape == (len(wl.tables), 16, s_max)
+    for i, t in enumerate(wl.tables):
+        assert (idx[i, :, t.seq:] == -1).all()
+        assert (idx[i, :, : t.seq] >= 0).all()
+
+
+# ------------------------------------------- synthetic.py deprecation shim
+
+
+def test_synthetic_string_path_deprecated_but_working():
+    rng = np.random.default_rng(0)
+    with pytest.warns(DeprecationWarning):
+        idx = synthetic.sample_indices(rng, T, 32, "real")
+    assert idx.shape == (32, T.seq)
+    with pytest.warns(DeprecationWarning):
+        fixed = synthetic.sample_indices(rng, T, 32, "fixed")
+    assert len(np.unique(fixed)) == 1
+
+
+def test_synthetic_object_path_no_warning(recwarn):
+    rng = np.random.default_rng(0)
+    wl = small_workload(batch=8)
+    idx = synthetic.query_batch(rng, wl, Zipf(1.2))
+    assert idx.shape[1] == 8
+    batch = synthetic.ctr_batch(rng, wl, distribution=Uniform())
+    assert batch["indices"].shape[1] == wl.batch
+    assert not any(
+        issubclass(w.category, DeprecationWarning) for w in recwarn.list
+    )
+
+
+# ------------------------------------------- frequency-aware cost/planner
+
+
+def _drift_model():
+    return analytic_model(
+        dataclasses.replace(TPU_V5E, l1_bytes=64 << 10, dma_latency=1e-8)
+    )
+
+
+def test_predict_freq_none_is_degenerate():
+    """freq=None reproduces the uniform-assumption model bit-for-bit."""
+    m = analytic_model()
+    t = TableSpec("t", rows=5000, dim=16, seq=3)
+    for s in Strategy:
+        assert m.predict(t, 512, 4, s) == m.predict(t, 512, 4, s, None)
+
+
+def test_predict_mass_scaling_and_conflict():
+    m = _drift_model()
+    t = TableSpec("t", rows=10_000, dim=16, seq=1)
+    hot = HotSet(n_hot=64, hot_frac=0.0, hot_mass=0.95).probs(t)
+    uni = Uniform().probs(t)
+    # a chunk carrying ~no mass pays ~no work (only the b0 launch constant)
+    b0 = m.betas[Strategy.L1][0]
+    lo_mass = m.predict(t, 1024, 1, Strategy.L1, hot, (5000, 10_000))
+    full = m.predict(t, 1024, 1, Strategy.L1, hot, (0, 10_000))
+    assert lo_mass - b0 < 0.1 * (full - b0)
+    # GM pays the conflict surcharge under concentration, L1/UB do not
+    gm_uni = m.predict(t, 1024, 1, Strategy.GM, uni)
+    gm_hot = m.predict(t, 1024, 1, Strategy.GM, hot)
+    assert gm_hot > 3 * gm_uni
+    for s in (Strategy.L1, Strategy.L1_UB, Strategy.GM_UB):
+        assert m.predict(t, 1024, 1, s, hot) <= m.predict(t, 1024, 1, s, uni) * 1.01
+
+
+def test_planner_promotes_hot_window_to_l1():
+    """The headline frequency-aware decision: a table too big for L1 under
+    the uniform assumption gets its hot window pinned once the histogram
+    shows the mass concentrates there — wherever the window sits."""
+    model = _drift_model()
+    wl = make_workload("hot", [200_000, 300, 500], batch=256)
+    l1_rows = (model.hardware.l1_bytes // wl.tables[0].row_bytes)
+
+    plan_uni = plan_asymmetric(wl, 4, model, freqs=workload_probs(wl, Uniform()))
+    assert not any(
+        a.table_idx == 0 and a.strategy.is_l1 for a in plan_uni.assignments
+    ), "uniform histogram must not promote the oversized table"
+
+    for dist in (Zipf(1.2), HotSet(0.005, 0.95), HotSet(0.005, 0.95).flip()):
+        freqs = workload_probs(wl, dist)
+        plan = plan_asymmetric(wl, 4, model, freqs=freqs)
+        plan.validate(wl.tables)
+        hot_chunks = [
+            a for a in plan.assignments
+            if a.table_idx == 0 and a.strategy.is_l1
+        ]
+        assert hot_chunks, f"no L1 promotion under {dist!r}"
+        (hc,) = hot_chunks
+        assert hc.rows <= l1_rows
+        # the pinned window actually covers the hot mass
+        assert freqs[0].range_mass(hc.row_offset, hc.row_offset + hc.rows) > 0.5
+        # and the promotion pays: less modeled traffic + lower predicted P99
+        assert (
+            modeled_plan_traffic(plan, wl.tables, wl.batch, freqs)[
+                "hbm_lookup_bytes"]
+            < modeled_plan_traffic(plan_uni, wl.tables, wl.batch, freqs)[
+                "hbm_lookup_bytes"]
+        )
+        assert predicted_p99(model, wl.tables, wl.batch, plan, freqs) <= (
+            predicted_p99(model, wl.tables, wl.batch, plan_uni, freqs)
+        )
+        assert plan.meta["planner"].endswith("+freq")
+        assert plan.meta["distribution"]["per_table"][0]["rows"] == 200_000
+
+
+def test_stale_plan_degrades_replanned_stays_bounded():
+    """The driftbench acceptance property at unit scale."""
+    model = _drift_model()
+    wl = make_workload("hot", [200_000, 300, 500], batch=256)
+    hs = workload_probs(wl, HotSet(0.005, 0.95))
+    flipped = workload_probs(wl, HotSet(0.005, 0.95).flip())
+    plan_hs = plan_asymmetric(wl, 4, model, freqs=hs)
+    plan_flip = plan_asymmetric(wl, 4, model, freqs=flipped)
+    matched = predicted_p99(model, wl.tables, wl.batch, plan_hs, hs)
+    stale = predicted_p99(model, wl.tables, wl.batch, plan_hs, flipped)
+    replanned = predicted_p99(model, wl.tables, wl.batch, plan_flip, flipped)
+    assert stale > 1.2 * matched
+    assert replanned < 1.05 * matched

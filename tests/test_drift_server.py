@@ -1,0 +1,224 @@
+"""Server drift-trigger + hot-swap replanning tests (DESIGN.md §5).
+
+The Server is model-agnostic, so most tests drive it with pure-numpy step
+functions (fast, no jit): what matters here is the state machine — sketch
+accumulation, hysteresis, parity-gated atomic swap, cooldown.  One e2e test
+swaps real packed plans through the jax executor.
+"""
+import numpy as np
+import pytest
+
+from repro.core.tables import TableSpec, Workload
+from repro.data.distributions import (
+    HotSet,
+    Uniform,
+    Zipf,
+    sample_workload,
+    workload_probs,
+)
+from repro.serving.server import DriftConfig, Server
+
+WL = Workload(
+    "drift-test",
+    (
+        TableSpec("big", rows=20_000, dim=4, seq=1),
+        TableSpec("small", rows=64, dim=4, seq=2),
+    ),
+    batch=64,
+)
+
+
+def _ref_step(tables, tag="a"):
+    """Pure-numpy pooled-embedding step over per-query (N, s) payloads."""
+
+    def step(payloads):
+        idx = np.stack(payloads, axis=1)  # (N, B, s)
+        outs = []
+        for i, t in enumerate(tables):
+            ii = idx[i]
+            valid = ii >= 0
+            g = t[np.where(valid, ii, 0)]
+            g[~valid] = 0.0
+            outs.append(g.sum(axis=1))
+        return np.stack(outs)
+
+    step.tag = tag
+    return step
+
+
+def _tables(rng):
+    return [rng.standard_normal((t.rows, t.dim)).astype(np.float32) for t in WL.tables]
+
+
+def _drive(srv, rng, dist, n_batches):
+    for b in range(n_batches):
+        idx = sample_workload(rng, WL, dist, WL.batch)
+        for q in range(WL.batch):
+            srv.submit(idx[:, q])
+        srv.pump()
+
+
+def _extract(payloads):
+    return np.stack(payloads, axis=1)
+
+
+def _config(tables, replans_log=None, **kw):
+    def replan(measured):
+        if replans_log is not None:
+            replans_log.append(measured)
+        return _ref_step(tables, tag="replanned")
+
+    defaults = dict(
+        baseline=workload_probs(WL, Uniform()),
+        extract_indices=_extract,
+        replan=replan,
+        check_every=2,
+        patience=2,
+        cooldown=4,
+    )
+    defaults.update(kw)
+    return DriftConfig(**defaults)
+
+
+def test_hot_swap_on_drift_with_parity():
+    """Skew onset trips the trigger; the shadow plan passes parity on the
+    cut-over batch and is atomically swapped in."""
+    rng = np.random.default_rng(0)
+    tables = _tables(rng)
+    measured_log = []
+    srv = Server(
+        _ref_step(tables, tag="original"),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, measured_log),
+    )
+    _drive(srv, rng, Uniform(), 4)
+    assert srv.replans == 0
+    _drive(srv, rng, Zipf(1.6), 12)
+    assert srv.replans >= 1
+    assert srv.parity_failures == 0
+    assert srv.step_fn.tag == "replanned"
+    assert all(ev["parity_ok"] for ev in srv.replan_events)
+    # the replan callable received the measured (not assumed) histograms
+    assert measured_log[0][0].top_mass(64) > 0.4
+    s = srv.stats()
+    assert s["replan"]["replans"] == srv.replans
+    assert s["replan"]["events"][0]["drift"] >= s["replan"]["threshold"]
+
+
+def test_no_replan_thrash_on_stationary_traffic():
+    """Hysteresis: stationary traffic (even skewed stationary traffic that
+    matches the plan's assumption) never triggers a replan."""
+    rng = np.random.default_rng(1)
+    tables = _tables(rng)
+    for dist in (Uniform(), Zipf(1.6)):
+        srv = Server(
+            _ref_step(tables, tag="original"),
+            max_batch=WL.batch,
+            max_wait_s=0.0,
+            drift=_config(tables, baseline=workload_probs(WL, dist)),
+        )
+        _drive(srv, rng, dist, 24)
+        assert srv.drift_checks > 3
+        assert srv.replans == 0, f"thrash under stationary {dist!r}"
+        assert srv.step_fn.tag == "original"
+
+
+def test_parity_failure_blocks_cutover():
+    """A shadow plan that disagrees on the cut-over batch is rejected: the
+    old plan keeps serving and the failure is counted."""
+    rng = np.random.default_rng(2)
+    tables = _tables(rng)
+
+    def broken_replan(measured):
+        good = _ref_step(tables, tag="broken")
+        return lambda payloads: good(payloads) + 1.0  # wrong outputs
+
+    srv = Server(
+        _ref_step(tables, tag="original"),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, replan=broken_replan),
+    )
+    _drive(srv, rng, HotSet(0.005, 0.95), 16)
+    assert srv.parity_failures >= 1
+    assert srv.replans == 0
+    assert srv.step_fn.tag == "original"
+    assert any(not ev["parity_ok"] for ev in srv.replan_events)
+
+
+def test_cooldown_limits_replan_rate():
+    """After a swap the trigger rests for `cooldown` batches even under
+    continuing drift."""
+    rng = np.random.default_rng(3)
+    tables = _tables(rng)
+    srv = Server(
+        _ref_step(tables),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, cooldown=1000),
+    )
+    _drive(srv, rng, HotSet(0.005, 0.95), 24)
+    assert srv.replans == 1  # continuing drift, but the cooldown holds
+
+
+def test_hot_swap_e2e_packed_plans():
+    """End-to-end: the replan callable re-plans + re-packs a real
+    PartitionedEmbeddingBag under the measured histogram, and the swapped
+    executor output stays parity-identical through the jax path."""
+    import dataclasses
+
+    import jax
+
+    from repro import compat
+    from repro.core import PartitionedEmbeddingBag, analytic_model
+    from repro.core.cost_model import TPU_V5E
+
+    model = analytic_model(
+        dataclasses.replace(TPU_V5E, l1_bytes=2048, dma_latency=1e-8)
+    )
+    wl = Workload("e2e", (TableSpec("t", rows=4096, dim=8, seq=1),
+                          TableSpec("u", rows=32, dim=8, seq=2)), batch=32)
+    mesh = compat.make_mesh((1, jax.device_count()), ("data", "model"))
+    rng = np.random.default_rng(4)
+    tables = [jax.numpy.asarray(
+        rng.standard_normal((t.rows, t.dim)), jax.numpy.float32
+    ) for t in wl.tables]
+
+    def make_step(freqs):
+        bag = PartitionedEmbeddingBag(
+            wl, n_cores=jax.device_count(), planner="asymmetric",
+            cost_model=model,
+            planner_kwargs=dict(freqs=freqs) if freqs is not None else {},
+        )
+        packed = bag.pack(tables)
+        apply = jax.jit(lambda idx: bag.apply(
+            packed, idx, mesh=mesh, use_kernels=False))
+
+        def step(payloads):
+            idx = jax.numpy.stack(payloads, axis=1)
+            return np.asarray(jax.block_until_ready(apply(idx)))
+
+        step.bag = bag
+        return step
+
+    freqs0 = workload_probs(wl, Uniform())
+    step0 = make_step(freqs0)
+    srv = Server(
+        step0, max_batch=wl.batch, max_wait_s=0.0,
+        drift=DriftConfig(
+            baseline=freqs0, extract_indices=_extract, replan=make_step,
+            check_every=2, patience=2, cooldown=4,
+        ),
+    )
+    gen = np.random.default_rng(5)
+    for b in range(12):
+        idx = sample_workload(gen, wl, HotSet(0.01, 0.95), wl.batch)
+        for q in range(wl.batch):
+            srv.submit(idx[:, q])
+        srv.pump()
+    assert srv.replans >= 1
+    assert srv.parity_failures == 0
+    # the swapped-in plan is frequency-aware and differs from the original
+    assert srv.step_fn.bag.plan.meta["planner"].endswith("+freq")
+    assert srv.step_fn.bag.plan.meta["distribution"] is not None
