@@ -1,20 +1,23 @@
 # Tier-1 flow: tests + benchmark regression gates.
 #
 #   make test         — the repo's tier-1 pytest suite
-#   make bench-check  — regenerate the layout bench + the drift bench (fast
-#                       smoke mode) and diff them against the committed
-#                       BENCH_embedding_layout.json / BENCH_drift.json
-#                       (>20% bytes/modeled regression, or a flipped drift
-#                       invariant, fails)
+#   make bench-check  — regenerate the layout bench + the drift/dedup
+#                       benches (fast smoke mode) and diff them against the
+#                       committed BENCH_embedding_layout.json /
+#                       BENCH_drift.json / BENCH_dedup.json (>20%
+#                       bytes/modeled regression, a collapsed dedup
+#                       reduction factor, or a flipped invariant, fails)
 #   make tier1        — both
 #   make bench        — regenerate BENCH_embedding_layout.json in place
 #   make driftbench   — full drift scenario matrix (modeled + served loop),
 #                       regenerating BENCH_drift.json in place
+#   make dedupbench   — full access-reduction matrix (modeled + parity +
+#                       interpret wall), regenerating BENCH_dedup.json
 
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-check bench driftbench tier1
+.PHONY: test bench-check bench driftbench dedupbench tier1
 
 test:
 	$(PY) -m pytest -x -q
@@ -28,5 +31,8 @@ bench:
 
 driftbench:
 	$(PY) benchmarks/driftbench.py
+
+dedupbench:
+	$(PY) benchmarks/dedupbench.py
 
 tier1: test bench-check

@@ -31,6 +31,16 @@ the tolerance on any gated metric.  Two baselines are gated (see
   candidate is regenerated in fast smoke mode (``--no-serve``: modeled
   matrix only, no jit) so the gate stays CPU-quick.
 
+``BENCH_dedup.json`` (dedupbench access-reduction matrix), when committed:
+
+* **modeled lookup bytes** (pre / post_dedup / post_cache / post_both) per
+  scenario — deterministic closed-form figures, gated at ``--bytes-tol``;
+* **reduction factors** — a candidate whose reduction *shrinks* by more
+  than the tolerance fails (direction-flipped gate: bigger is better);
+* **invariants** — zipf-1.2 >= 2x post-dedup shrink, uniform never
+  inflated, fused dedup/cache parity.  Interpret walls are never gated.
+  The dedup candidate regenerates in fast smoke mode (``--no-measure``).
+
 Wired into ``make bench-check`` (the tier-1 flow's companion target).
 """
 from __future__ import annotations
@@ -44,6 +54,7 @@ from pathlib import Path
 _REPO_ROOT = Path(__file__).resolve().parent.parent
 _BASELINE = _REPO_ROOT / "BENCH_embedding_layout.json"
 _DRIFT_BASELINE = _REPO_ROOT / "BENCH_drift.json"
+_DEDUP_BASELINE = _REPO_ROOT / "BENCH_dedup.json"
 
 _BYTES_KEYS = ("chunk_bytes",)
 _TRAFFIC_PATHS = ("fused", "xla_gather")
@@ -154,6 +165,61 @@ def compare_drift(
     return failures
 
 
+def _dedup_metrics(record: dict) -> dict[str, float]:
+    """dedupbench record -> gated deterministic columns: modeled lookup
+    bytes per scenario x mode plus the reduction factors (direction-flipped:
+    see compare_dedup).  Measured interpret walls are never gated."""
+    bytes_out: dict[str, float] = {}
+    reductions: dict[str, float] = {}
+    for s in record.get("scenarios", []):
+        for k in (
+            "pre_bytes", "post_dedup_bytes", "post_cache_bytes",
+            "post_both_bytes",
+        ):
+            if k in s:
+                bytes_out[f"dedup.{s['name']}.{k}"] = float(s[k])
+        for k in ("reduction_dedup", "reduction_both"):
+            if k in s:
+                reductions[f"dedup.{s['name']}.{k}"] = float(s[k])
+    return {**bytes_out, **reductions}
+
+
+def compare_dedup(
+    baseline: dict, candidate: dict, *, tol: float = 0.20
+) -> list[str]:
+    """Dedup-bench gate: byte regressions, reduction-factor collapses, and
+    invariant flips (zipf >= 2x shrink, uniform never inflated, parity)."""
+    failures: list[str] = []
+    base, cand = _dedup_metrics(baseline), _dedup_metrics(candidate)
+    for name, b in sorted(base.items()):
+        c = cand.get(name)
+        if c is None:
+            failures.append(f"{name}: missing from candidate (was {b:.2f})")
+            continue
+        shrinking_is_bad = name.endswith(
+            ("reduction_dedup", "reduction_both")
+        )
+        if shrinking_is_bad:
+            if b > 0 and c < b * (1.0 - tol):
+                failures.append(
+                    f"{name}: {c:.2f}x vs baseline {b:.2f}x "
+                    f"({(c / b - 1) * 100:.1f}% < -{tol * 100:.0f}% tol)"
+                )
+        elif b > 0 and c > b * (1.0 + tol):
+            failures.append(
+                f"{name}: {c:.0f} vs baseline {b:.0f} "
+                f"(+{(c / b - 1) * 100:.1f}% > {tol * 100:.0f}% tol)"
+            )
+    for k, v in baseline.get("invariants", {}).items():
+        if not v:
+            continue
+        if k == "parity_ok" and "measured" not in candidate:
+            continue  # candidate ran in fast smoke mode (modeled only)
+        if not candidate.get("invariants", {}).get(k, False):
+            failures.append(f"dedup invariant {k!r}: true in baseline, now false")
+    return failures
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--baseline", type=Path, default=_BASELINE)
@@ -172,6 +238,14 @@ def main(argv=None) -> int:
     )
     p.add_argument("--skip-drift", action="store_true",
                    help="gate only the layout bench")
+    p.add_argument("--baseline-dedup", type=Path, default=_DEDUP_BASELINE)
+    p.add_argument(
+        "--candidate-dedup", type=Path, default=None,
+        help="dedup bench JSON to check; omitted = regenerate in fast smoke "
+             "mode (modeled matrix only) when the baseline exists",
+    )
+    p.add_argument("--skip-dedup", action="store_true",
+                   help="skip the access-reduction bench gate")
     args = p.parse_args(argv)
 
     baseline = json.loads(args.baseline.read_text())
@@ -213,6 +287,24 @@ def main(argv=None) -> int:
             if name in dc and db[name] > 0:
                 delta = (dc[name] / db[name] - 1) * 100
                 print(f"[bench-check] {name}: {dc[name]:.2f} ({delta:+.1f}%)")
+
+    if not args.skip_dedup and args.baseline_dedup.exists():
+        dedup_base = json.loads(args.baseline_dedup.read_text())
+        if args.candidate_dedup is not None:
+            dedup_cand = json.loads(args.candidate_dedup.read_text())
+        else:
+            sys.path.insert(0, str(_REPO_ROOT))
+            from benchmarks.dedupbench import run as dedup_run
+
+            tmp = Path(tempfile.mkstemp(suffix=".json")[1])
+            dedup_cand = dedup_run(measure=False, csv=False, out_path=tmp)
+            print(f"[bench-check] regenerated dedup candidate -> {tmp}")
+        failures += compare_dedup(dedup_base, dedup_cand, tol=args.bytes_tol)
+        kb, kc = _dedup_metrics(dedup_base), _dedup_metrics(dedup_cand)
+        for name in sorted(kb):
+            if name in kc and kb[name] > 0:
+                delta = (kc[name] / kb[name] - 1) * 100
+                print(f"[bench-check] {name}: {kc[name]:.2f} ({delta:+.1f}%)")
 
     if failures:
         print(f"[bench-check] FAIL — {len(failures)} regression(s):")

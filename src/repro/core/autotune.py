@@ -12,6 +12,11 @@ records the full sweep in ``plan.meta["tuning"]`` — so a packed plan carries
 the evidence for its own block sizes.  On TPU the sweep times compiled
 kernels; off-TPU it times interpret mode (flagged in the record), which still
 ranks candidates by step count / padding but is not wall-representative.
+
+The access-reduction knobs (DESIGN.md §6) sweep on the same harness:
+``unique_cap_candidates`` / ``cache_rows_candidates`` extend the grid, with
+synthetic indices drawn from the supplied histograms so dedup/cache
+candidates are timed under the traffic they exist for.
 """
 from __future__ import annotations
 
@@ -48,49 +53,80 @@ def autotune_block_sizes(
     batch: int,
     block_r_candidates: Sequence[int] = _BLOCK_R_CANDIDATES,
     block_b_candidates: Sequence[int | None] = (None,),
+    unique_cap_candidates: Sequence[int | None] = (None,),
+    cache_rows_candidates: Sequence[int | None] = (None,),
+    freqs=None,
     iters: int = 2,
     seed: int = 0,
 ) -> dict:
-    """Sweep (block_r, block_b), record ``plan.meta["tuning"]``, return best.
+    """Sweep (block_r, block_b[, unique_cap, cache_rows]), record
+    ``plan.meta["tuning"]``, return the best combination.
 
-    Returns ``{"block_r": int, "block_b": int | None}`` — feed straight into
-    :func:`repro.core.partition.pack_plan`.
+    Returns ``{"block_r", "block_b", "unique_cap", "cache_rows"}`` — feed
+    straight into :func:`repro.core.partition.pack_plan`.  The access-
+    reduction axes (DESIGN.md §6) default to the single candidate ``None``
+    = "whatever ``plan.meta['cache']`` selected", so the classic two-axis
+    sweep is unchanged; pass explicit candidate lists (0 = off) to sweep
+    dedup width / residency-cache size, with ``freqs`` supplied whenever a
+    nonzero ``cache_rows`` candidate needs its carve.  Synthetic indices
+    are drawn from ``freqs`` when given (a dedup/cache sweep timed under
+    uniform indices would undersell both knobs).
     """
     if not plan.assignments:
         plan.meta["tuning"] = {"candidates": [], "best": None}
-        return {"block_r": None, "block_b": None}
+        return {
+            "block_r": None, "block_b": None,
+            "unique_cap": None, "cache_rows": None,
+        }
+    from repro.core.cost_model import freq_of
+
     s_max = max(t.seq for t in tables)
     rng = np.random.default_rng(seed)
     idx = np.full((len(tables), batch, s_max), -1, np.int32)
     for i, t in enumerate(tables):
-        idx[i, :, : t.seq] = rng.integers(0, t.rows, (batch, t.seq))
+        f = freq_of(freqs, i)
+        if f is not None and len(f.ids):
+            from repro.data.distributions import _sample_from_probs
+
+            idx[i, :, : t.seq] = _sample_from_probs(rng, f, (batch, t.seq))
+        else:
+            idx[i, :, : t.seq] = rng.integers(0, t.rows, (batch, t.seq))
     idx = jnp.asarray(idx)
 
     backend = jax.default_backend()
     candidates = []
     for br in dict.fromkeys(int(c) for c in block_r_candidates):
         for bb in dict.fromkeys(block_b_candidates):
-            packed = pack_plan(plan, tables, None, block_r=br, block_b=bb)
-            local = packed.strip_core(_heaviest_core(packed))
-            fn = jax.jit(
-                lambda p, i: _fused_asym_lookup(p, i, n_tables=len(tables))
-            )
-            jax.block_until_ready(fn(local, idx))  # compile/warm
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                jax.block_until_ready(fn(local, idx))
-            wall_us = (time.perf_counter() - t0) / iters * 1e6
-            lay = plan.meta["layout"]
-            candidates.append(
-                {
-                    "block_r": br,
-                    "block_b": 0 if bb is None else int(bb),
-                    "n_steps": lay["n_steps"],
-                    "padding_frac": lay["padding_frac"],
-                    "chunk_bytes": lay["chunk_bytes"],
-                    "wall_us": wall_us,
-                }
-            )
+            for uc in dict.fromkeys(unique_cap_candidates):
+                for cr in dict.fromkeys(cache_rows_candidates):
+                    packed = pack_plan(
+                        plan, tables, None, block_r=br, block_b=bb,
+                        unique_cap=uc, cache_rows=cr, freqs=freqs,
+                    )
+                    local = packed.strip_core(_heaviest_core(packed))
+                    fn = jax.jit(
+                        lambda p, i: _fused_asym_lookup(
+                            p, i, n_tables=len(tables)
+                        )
+                    )
+                    jax.block_until_ready(fn(local, idx))  # compile/warm
+                    t0 = time.perf_counter()
+                    for _ in range(iters):
+                        jax.block_until_ready(fn(local, idx))
+                    wall_us = (time.perf_counter() - t0) / iters * 1e6
+                    lay = plan.meta["layout"]
+                    candidates.append(
+                        {
+                            "block_r": br,
+                            "block_b": 0 if bb is None else int(bb),
+                            "unique_cap": int(packed.unique_cap),
+                            "cache_rows": int(packed.cache_rows),
+                            "n_steps": lay["n_steps"],
+                            "padding_frac": lay["padding_frac"],
+                            "chunk_bytes": lay["chunk_bytes"],
+                            "wall_us": wall_us,
+                        }
+                    )
     best = min(candidates, key=lambda c: c["wall_us"])
     plan.meta["tuning"] = {
         "candidates": candidates,
@@ -102,4 +138,6 @@ def autotune_block_sizes(
     return {
         "block_r": best["block_r"],
         "block_b": best["block_b"] or None,
+        "unique_cap": best["unique_cap"],
+        "cache_rows": best["cache_rows"],
     }

@@ -23,6 +23,21 @@ to the chunk's access concentration (``gm_conflict``; the paper's
 bank/line-conflict pathology on unbalanced distributions, §IV-C).  With
 ``freq=None`` everything degenerates exactly to the uniform-assumption
 model above.
+
+Access-reduction pricing (DESIGN.md §6): ``CostModel`` additionally carries
+the executor's two access-reduction knobs, both off by default so every
+existing consumer is untouched:
+
+* ``dedup=True`` — the fused executor unique-izes indices per chunk before
+  gathering, so a GM chunk pays per *unique* row, not per lookup:
+  the work term becomes ``min(lookups, E[unique rows])``
+  (``RowProbs.expected_unique``) and the conflict surcharge vanishes (each
+  row is read exactly once — nothing serializes);
+* ``cache_rows=C`` — a per-core resident mini-table holds the C hottest
+  rows; the mass they carry is served from VMEM and leaves the GM work term
+  (per-chunk approximation: each chunk prices its own top-C rows as cached;
+  the packer's actual per-core allocation is modeled exactly by
+  ``repro.core.traffic.modeled_plan_traffic``).
 """
 from __future__ import annotations
 
@@ -153,12 +168,17 @@ class CostModel:
     concentration = 1 (the >10x pathology).  L1/UB strategies are
     conflict-free by construction (persistent scratchpad / one-hot MXU
     sweep) — the robustness asymmetry the paper measures.
+
+    ``dedup``/``cache_rows`` price the executor's access-reduction subsystem
+    (module docstring; both default off = the PR3 model, bit-identical).
     """
 
     betas: dict[Strategy, Betas]
     hardware: HardwareSpec = TPU_V5E
     gm_conflict: float = 8.0
     conflict_rows: int = 64
+    dedup: bool = False
+    cache_rows: int = 0
 
     # -- prediction ---------------------------------------------------------
 
@@ -184,11 +204,31 @@ class CostModel:
         work = batch * table.seq / max(cores, 1)
         if freq is not None:
             lo, hi = row_range if row_range is not None else (0, table.rows)
+            n = work  # lookups landing on this core before any reduction
             mass = freq.range_mass(lo, hi)
-            work *= mass
-            if strategy is Strategy.GM and mass > 0:
-                conc = freq.range_top_mass(lo, hi, self.conflict_rows) / mass
-                work *= 1.0 + self.gm_conflict * conc
+            cache_mass = 0.0
+            if self.cache_rows and strategy is Strategy.GM:
+                # resident-cache hit: the chunk's hottest rows are served
+                # from the per-core mini-table, never from HBM.
+                cache_mass = freq.range_top_mass(lo, hi, self.cache_rows)
+            work = n * max(mass - cache_mass, 0.0)
+            if strategy is Strategy.GM and work > 0:
+                if self.dedup:
+                    # per-unique-row reads: duplicates fold at batch prep, so
+                    # no repeated-row serialization survives (no surcharge).
+                    work = min(
+                        work,
+                        freq.expected_unique(
+                            lo, hi, n, skip_top=self.cache_rows
+                        ),
+                    )
+                else:
+                    # conflict concentration of the rows still going to HBM
+                    top = self.cache_rows + self.conflict_rows
+                    conc = (
+                        freq.range_top_mass(lo, hi, top) - cache_mass
+                    ) / max(mass - cache_mass, 1e-30)
+                    work *= 1.0 + self.gm_conflict * max(conc, 0.0)
         j = b0 + b1 * work
         if strategy.is_ub:
             j += b2 * table.rows

@@ -75,17 +75,35 @@ class PartitionedEmbeddingBag:
         block_r: int | None = None,
         block_b: int | None = None,
         autotune: bool = False,
+        freqs=None,
+        unique_cap: int | None = None,
+        cache_rows: int | None = None,
     ) -> PackedPlan:
         """Materialize the plan.  ``autotune=True`` sweeps the fused kernel's
-        ``block_r``/``block_b`` first (recorded in ``plan.meta["tuning"]``)."""
+        ``block_r``/``block_b`` first (recorded in ``plan.meta["tuning"]``).
+
+        ``unique_cap``/``cache_rows`` default to the planner's selection in
+        ``plan.meta["cache"]`` (set by ``planner_kwargs`` ``dedup=``/
+        ``cache=``); ``freqs`` defaults to the histograms the plan was priced
+        under, so a dedup/cache plan packs its residency cache without extra
+        arguments."""
         layout = layout or self.layout
+        if freqs is None:
+            freqs = self.planner_kwargs.get("freqs")
         if autotune and layout == "ragged" and block_r is None:
             from repro.core.autotune import autotune_block_sizes
 
             best = autotune_block_sizes(
-                self.plan, self.workload.tables, batch=self.workload.batch
+                self.plan, self.workload.tables, batch=self.workload.batch,
+                freqs=freqs,
             )
             block_r, block_b = best["block_r"], block_b or best["block_b"]
+            # the sweep's winning access-reduction sizes ship with its block
+            # sizes (with default candidates these equal the planner's pick)
+            if unique_cap is None:
+                unique_cap = best["unique_cap"]
+            if cache_rows is None:
+                cache_rows = best["cache_rows"]
         return pack_plan(
             self.plan,
             self.workload.tables,
@@ -94,6 +112,9 @@ class PartitionedEmbeddingBag:
             layout=layout,
             block_r=block_r,
             block_b=block_b,
+            freqs=freqs,
+            unique_cap=unique_cap,
+            cache_rows=cache_rows,
         )
 
     def layout_summary(self) -> dict:

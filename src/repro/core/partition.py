@@ -63,6 +63,13 @@ packs; all values are JSON-able):
 * ``distribution`` — per-table access-histogram summaries the plan was
   priced under (``None`` = the uniform assumption; see
   ``repro.core.planner._distribution_meta`` and DESIGN.md §5);
+* ``cache``        — the access-reduction subsystem record (DESIGN.md §6),
+  written by ``plan_asymmetric(dedup=/cache=)`` and extended by
+  :func:`pack_plan`: ``dedup`` (bool), ``unique_cap`` (static per-slot
+  dedup width), ``cache_rows`` (residency-cache row budget),
+  ``cache_target``/``coverage`` (requested / modeled hit fraction), and
+  ``packed`` (written by :func:`pack_plan`: the realized per-core carve —
+  ``cache_rows`` after padding, ``rows_per_core``);
 * ``layout``       — written by :func:`pack_plan`: ``kind``,
   ``chunk_bytes``/``dense_bytes``/``bytes_vs_dense``, ``block_r``/
   ``block_b``, ``slot_window``, ``n_steps``/``n_padding_steps``,
@@ -87,6 +94,7 @@ import numpy as np
 from jax import lax
 
 from repro import compat
+from repro.core.cost_model import freq_of
 from repro.core.strategies import Plan, Strategy
 from repro.core.tables import TableSpec
 from repro.kernels.embedding_gm import embedding_bag_gm
@@ -96,6 +104,7 @@ from repro.kernels.embedding_ub import embedding_bag_ub
 __all__ = [
     "STRATEGY_CODE",
     "PackedPlan",
+    "cache_plan_entries",
     "pack_plan",
     "partitioned_lookup",
     "vocab_parallel_embed",
@@ -154,11 +163,16 @@ class PackedPlan:
     sym_table: Any  # (Nsym,) int32
     sym_rows: Any  # (Nsym,) int32
     sym_strategy: Any  # (Nsym,) int32
+    # hot-row residency cache (ragged layout; zero-sized when off)
+    cache_data: Any = None  # (K, C, E) per-core resident hot-row mini-table
+    cache_remap: Any = None  # (K, T+1) int32 buffer row -> cache pos, -1 cold
     # static layout descriptors (pytree aux data)
     layout: str = "ragged"
     block_r: int = 0  # fused-kernel row-block size (ragged)
     slot_window: int = 0  # largest per-slot block_r allocation (informational)
     block_b: int = 0  # fused-kernel resident batch rows; 0 = auto
+    unique_cap: int = 0  # batch-dedup width per slot; 0 = dedup off
+    cache_rows: int = 0  # padded residency-cache rows; 0 = cache off
 
     _ARRAY_FIELDS = (
         "chunk_data", "slot_table", "slot_offset", "slot_rows",
@@ -166,6 +180,7 @@ class PackedPlan:
         "step_slot", "step_base", "step_block", "step_strategy",
         "rejoin_send", "rejoin_owned_pos", "rejoin_bucket",
         "sym_data", "sym_table", "sym_rows", "sym_strategy",
+        "cache_data", "cache_remap",
     )
     # replicated across the core axis (everything else is core-sharded)
     _REPLICATED_FIELDS = (
@@ -175,7 +190,10 @@ class PackedPlan:
 
     def tree_flatten(self):
         children = tuple(getattr(self, f) for f in self._ARRAY_FIELDS)
-        aux = (self.layout, self.block_r, self.slot_window, self.block_b)
+        aux = (
+            self.layout, self.block_r, self.slot_window, self.block_b,
+            self.unique_cap, self.cache_rows,
+        )
         return children, aux
 
     @classmethod
@@ -249,6 +267,52 @@ def _rejoin_maps(
     return owner, bucket, owned_pos, send
 
 
+def cache_plan_entries(
+    plan: Plan,
+    tables: Sequence[TableSpec],
+    freqs,
+    cache_rows: int,
+) -> dict[int, list]:
+    """Per-core residency-cache carve: the ``cache_rows`` rows of each core's
+    **GM** chunk inventory with the highest expected hit count.
+
+    Only GM chunks are candidates: GM is the one strategy that pays HBM per
+    landing lookup, so it is the only place a resident hot row saves modeled
+    (and real per-lookup) traffic — UB streams its chunk regardless and
+    L1/L1-UB are already priced resident; carving their rows would burn
+    cache slots for zero credited savings.  Candidates are ranked by
+    per-query expected hits ``p · seq / replicas`` with deterministic tie
+    order (table, then row id) — so shadow re-pack plans carve
+    byte-identical caches across runs.  Returns
+    ``{core: [(slot_index, assignment, global_row, weight), ...]}`` (at most
+    ``cache_rows`` entries per core; within one chunk the selected rows are
+    always that chunk's hottest prefix, which is what the cost/traffic
+    models assume).  Shared by :func:`pack_plan` (contents) and
+    ``repro.core.traffic.modeled_plan_traffic`` (hit accounting).
+    """
+    out: dict[int, list] = {c: [] for c in range(plan.n_cores)}
+    if not cache_rows or freqs is None:
+        return out
+    for core, assigns in plan.per_core().items():
+        cand = []
+        for s_i, a in enumerate(assigns):
+            f = freq_of(freqs, a.table_idx)
+            if f is None or a.strategy is not Strategy.GM:
+                continue
+            ids = np.asarray(f.ids, np.int64)
+            probs = np.asarray(f.probs, np.float64)
+            sel = (ids >= a.row_offset) & (ids < a.row_offset + a.rows)
+            w = probs[sel] * tables[a.table_idx].seq / max(a.replicas, 1)
+            for gid, ww in zip(ids[sel].tolist(), w.tolist()):
+                cand.append((-ww, a.table_idx, gid, s_i))
+        cand.sort()
+        out[core] = [
+            (s_i, assigns[s_i], gid, -nw)
+            for nw, _, gid, s_i in cand[:cache_rows]
+        ]
+    return out
+
+
 def pack_plan(
     plan: Plan,
     tables: Sequence[TableSpec],
@@ -258,6 +322,9 @@ def pack_plan(
     layout: str = "ragged",
     block_r: int | None = None,
     block_b: int | None = None,
+    freqs=None,
+    unique_cap: int | None = None,
+    cache_rows: int | None = None,
 ) -> PackedPlan:
     """Materialize a Plan into the packed executor layout.
 
@@ -270,9 +337,29 @@ def pack_plan(
     ``block_b`` override the fused kernel's row-block / resident-batch sizes
     (see :mod:`repro.core.autotune` for the tuned pick).  A ``layout``
     summary (bytes, padding fraction) is recorded in ``plan.meta`` either way.
+
+    ``unique_cap``/``cache_rows`` arm the access-reduction subsystem
+    (DESIGN.md §6); ``None`` resolves each from ``plan.meta["cache"]`` (the
+    planner's selection), so a ``plan_asymmetric(dedup=True, cache=True)``
+    plan packs its dedup width and residency cache automatically.  The cache
+    carve (top-mass rows per core + the buffer-row→cache-position remap)
+    needs the access histograms: pass the same ``freqs`` the plan was priced
+    under.  Ragged layout only.
     """
     if layout not in ("ragged", "dense"):
         raise ValueError(f"unknown layout {layout!r}")
+    access_meta = plan.meta.get("cache") or {}
+    if unique_cap is None:
+        unique_cap = int(access_meta.get("unique_cap") or 0)
+    if cache_rows is None:
+        cache_rows = int(access_meta.get("cache_rows") or 0)
+    if cache_rows and freqs is None:
+        raise ValueError(
+            "cache_rows > 0 needs the access histograms (freqs) to carve "
+            "the hot-row residency cache"
+        )
+    if layout == "dense" and (unique_cap or cache_rows):
+        raise ValueError("dedup/cache require layout='ragged'")
     e = tables[0].dim
     if any(t.dim != e for t in tables):
         raise ValueError("all tables must share the embedding dim E")
@@ -330,6 +417,8 @@ def pack_plan(
         step_base = np.zeros((k, 0), np.int32)
         step_block = np.zeros((k, 0), np.int32)
         step_strategy = np.zeros((k, 0), np.int32)
+        cache_data = jnp.zeros((k, 0, e), dtype)
+        cache_remap = jnp.zeros((k, 1), jnp.int32)
         br = 0
         slot_window = 0
         n_pad_steps = 0
@@ -393,6 +482,50 @@ def pack_plan(
                 )
                 buf[core, start : start + a.rows] = chunk
         chunk_arr = jnp.asarray(buf)
+
+        if cache_rows:
+            # residency-cache carve: copy each core's top-mass rows into the
+            # dense mini-table and point the buffer-row remap at them; the
+            # executor splits lookups hot/cold through this remap and the
+            # kernel pins cache_np VMEM-resident across steps.  The planner
+            # sizes the budget workload-wide, but only GM chunks are carve
+            # candidates — clamp to the realized carve so zero rows are
+            # never allocated or charged against the kernel's VMEM budget.
+            entries = cache_plan_entries(plan, tables, freqs, cache_rows)
+            realized = max((len(v) for v in entries.values()), default=0)
+            cache_rows = min(cache_rows, realized)
+        if cache_rows:
+            cache_pad = _align(cache_rows, _ROW_PAD)
+            cache_np = np.zeros((k, cache_pad, e), jnp.dtype(dtype).name)
+            remap_np = -np.ones((k, t_pad + 1), np.int32)
+            for core in range(k):
+                # one fancy-indexed fetch per (core, table): per-row tbl()
+                # round trips would be paid on every shadow re-pack.
+                rows_by_table: dict[int, list[tuple[int, int]]] = {}
+                for p, (s_i, a, gid, _w) in enumerate(entries[core]):
+                    row = int(slot_row_start[core, s_i]) + gid - a.row_offset
+                    remap_np[core, row] = p
+                    rows_by_table.setdefault(a.table_idx, []).append((p, gid))
+                for ti, pairs in rows_by_table.items():
+                    pos = [p for p, _ in pairs]
+                    gids = [g for _, g in pairs]
+                    cache_np[core, pos] = np.asarray(tbl(ti)[jnp.asarray(gids)])
+            cache_data = jnp.asarray(cache_np)
+            cache_remap = jnp.asarray(remap_np)
+            cache_rows = cache_pad
+            plan.meta.setdefault("cache", {})["packed"] = {
+                "cache_rows": int(cache_pad),
+                "rows_per_core": [len(entries[c]) for c in range(k)],
+            }
+        else:
+            cache_data = jnp.zeros((k, 0, e), dtype)
+            cache_remap = jnp.zeros((k, t_pad + 1), jnp.int32)
+            if plan.meta.get("cache", {}).get("cache_rows"):
+                # requested but nothing carvable (no GM chunks hold explicit
+                # hot rows) — record the empty carve so stats stay honest.
+                plan.meta["cache"]["packed"] = {
+                    "cache_rows": 0, "rows_per_core": [0] * k,
+                }
 
         # uniform step count across cores (shard_map runs one program);
         # padding steps target the trash slot (id = max_slots) with base 0,
@@ -479,10 +612,14 @@ def pack_plan(
         sym_table=jnp.asarray(sym_table),
         sym_rows=jnp.asarray(sym_rows),
         sym_strategy=jnp.asarray(sym_strategy),
+        cache_data=cache_data,
+        cache_remap=cache_remap,
         layout=layout,
         block_r=br,
         slot_window=slot_window,
         block_b=int(block_b or 0),
+        unique_cap=int(unique_cap),
+        cache_rows=int(cache_rows),
     )
 
 
@@ -668,6 +805,17 @@ def _fused_asym_lookup(
     else:
         # ragged: -1 sentinel (matches no row-block window in the kernel)
         lidx = jnp.where(valid, local, -1).astype(jnp.int32)
+        cache = hidx = None
+        if packed.cache_rows:
+            # hot/cold split through the packed remap: cache-resident rows
+            # leave the streaming index tensor and arrive as cache positions.
+            trash = packed.cache_remap.shape[0] - 1  # remap[trash] == -1
+            g = jnp.where(
+                valid, packed.slot_row_start[:, None, None] + local, trash
+            )
+            hidx = jnp.take(packed.cache_remap, g).astype(jnp.int32)
+            lidx = jnp.where(hidx >= 0, -1, lidx)
+            cache = packed.cache_data
         pooled = multi_embedding_bag_ragged(
             packed.chunk_data[:-1],  # drop the shared zero row: block_r-tiled
             lidx,
@@ -678,6 +826,9 @@ def _fused_asym_lookup(
             block_r=packed.block_r,
             block_b=packed.block_b or None,
             interpret=interp,
+            unique_cap=packed.unique_cap,
+            cache=cache,
+            hidx=hidx,
         )  # (S, B, E) f32
     out = jnp.zeros((n_tables, b, e), jnp.float32)
     return out.at[jnp.maximum(ti, 0)].add(
@@ -822,6 +973,8 @@ def partitioned_lookup(
         block_r=packed.block_r,
         slot_window=packed.slot_window,
         block_b=packed.block_b,
+        unique_cap=packed.unique_cap,
+        cache_rows=packed.cache_rows,
     )
     fn = compat.shard_map(
         spmd,

@@ -36,7 +36,7 @@ live traffic against what the plan was priced under.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 
@@ -50,6 +50,7 @@ __all__ = [
     "plan_baseline",
     "plan_symmetric",
     "predicted_p99",
+    "select_access_reduction",
 ]
 
 
@@ -92,6 +93,89 @@ def predicted_p99(
     return float(t.max()) if len(t) else 0.0
 
 
+def _validate_freqs(freqs, n_tables: int) -> None:
+    """Reject histogram collections that reference tables the workload does
+    not have: a mapping keyed by an unknown index (or a sequence longer than
+    the table list) used to be *silently ignored* by ``freq_of`` — a typo'd
+    key meant the planner quietly priced that table as uniform."""
+    if freqs is None:
+        return
+    if isinstance(freqs, Mapping):
+        unknown = sorted(
+            k for k in freqs
+            if not (isinstance(k, (int, np.integer)) and 0 <= int(k) < n_tables)
+        )
+        if unknown:
+            raise ValueError(
+                f"freqs contains entries for unknown tables {unknown!r} "
+                f"(workload has tables 0..{n_tables - 1}); a silently "
+                "dropped histogram would be priced as uniform"
+            )
+    elif len(freqs) > n_tables:
+        raise ValueError(
+            f"freqs has {len(freqs)} entries for a {n_tables}-table "
+            "workload; the extras would be silently ignored"
+        )
+
+
+def _uniform_or(freq, rows: int):
+    from repro.data.distributions import RowProbs
+
+    return freq if freq is not None else RowProbs.uniform(rows)
+
+
+def select_access_reduction(
+    tables: Sequence[TableSpec],
+    freqs=None,
+    *,
+    dedup: bool = True,
+    cache: bool = True,
+    cache_target: float = 0.75,
+    max_cache_rows: int = 4096,
+    min_cache_coverage: float = 0.05,
+) -> dict:
+    """Size the executor's access-reduction knobs from the histograms
+    (DESIGN.md §6): the residency-cache row budget and the expected cache
+    coverage.  Returns a partial ``plan.meta["cache"]`` record; the planner
+    fills in ``unique_cap`` once the chunking is known.
+
+    ``cache_rows`` — smallest explicit-row prefix (rows merged across tables,
+    ranked by per-query expected hits ``p·s``, ties by (table, id)) covering
+    ``cache_target`` of the workload's lookups, aligned to 8 and capped at
+    ``max_cache_rows``; coverage is a per-query fraction, so the rule is
+    batch-size independent.  A histogram too flat to ever reach
+    ``min_cache_coverage`` disables the cache (0 rows): pinning uniform
+    traffic buys nothing.
+    """
+    cache_rows = 0
+    coverage = 0.0
+    total_seq = float(sum(t.seq for t in tables)) or 1.0
+    if cache and freqs is not None:
+        weights = []
+        for i, t in enumerate(tables):
+            f = freq_of(freqs, i)
+            if f is None:
+                continue
+            for p in np.asarray(f.probs, np.float64):
+                weights.append(p * t.seq)
+        weights = np.sort(np.asarray(weights))[::-1]
+        if len(weights):
+            cum = np.cumsum(weights) / total_seq
+            if float(cum[-1]) >= min_cache_coverage:
+                k = int(np.searchsorted(cum, min(cache_target, cum[-1])) + 1)
+                cache_rows = min(int(-(-k // 8) * 8), max_cache_rows)
+                # coverage of the CLAMPED budget, not the uncapped prefix —
+                # what the carve can actually deliver.
+                coverage = float(cum[min(cache_rows, len(cum)) - 1])
+    return {
+        "dedup": bool(dedup),
+        "cache_rows": int(cache_rows),
+        "cache_target": float(cache_target),
+        "coverage": coverage,
+        "unique_cap": 0,
+    }
+
+
 def _distribution_meta(freqs, n_tables: int):
     """JSON-able record of the histograms a plan was priced under."""
     if freqs is None:
@@ -117,6 +201,7 @@ def plan_baseline(
     cannot change the plan — the baseline has no strategy freedom, which is
     exactly why it is distribution-sensitive."""
     n = len(workload.tables)
+    _validate_freqs(freqs, n)
     return Plan(
         workload_name=workload.name,
         n_cores=n_cores,
@@ -139,6 +224,7 @@ def plan_symmetric(
     (GM picks pay the conflict surcharge on hot traffic, so hot tables lean
     harder toward L1/UB)."""
     tables, batch = workload.tables, workload.batch
+    _validate_freqs(freqs, len(tables))
     order = _paper_order(tables)
     l1_left = model.hardware.l1_bytes
     strategies: dict[int, Strategy] = {}
@@ -312,6 +398,10 @@ def plan_asymmetric(
     rock_theta: float = 1.1,
     shard_rocks: bool = False,
     freqs=None,
+    dedup: bool = False,
+    cache: bool = False,
+    cache_target: float = 0.75,
+    max_cache_rows: int = 4096,
 ) -> Plan:
     """Paper §III-B greedy asymmetric planner.
 
@@ -333,9 +423,26 @@ def plan_asymmetric(
     asc size) key places byte-tiny tables first, letting them claim the L1
     budget before the mass-heavy hot chunks even arrive — under a histogram
     the placement order must follow priced cost, not raw size.
+
+    ``dedup``/``cache`` (DESIGN.md §6, both default off) arm the executor's
+    access-reduction subsystem: every chunk is priced on post-dedup /
+    post-cache traffic (``CostModel.dedup``/``cache_rows``), the residency
+    cache is sized by :func:`select_access_reduction`, and the chosen
+    ``unique_cap`` (max expected unique rows over the placed chunks, with
+    headroom) is recorded in ``plan.meta["cache"]`` for ``pack_plan``.
     """
     tables, batch = workload.tables, workload.batch
+    _validate_freqs(freqs, len(tables))
     lpt = lpt or freqs is not None
+    access = None
+    if dedup or cache:
+        access = select_access_reduction(
+            tables, freqs, dedup=dedup, cache=cache,
+            cache_target=cache_target, max_cache_rows=max_cache_rows,
+        )
+        model = dataclasses.replace(
+            model, dedup=dedup, cache_rows=access["cache_rows"]
+        )
 
     def best_single_core(i: int, t: TableSpec) -> float:
         cands = [Strategy.GM, Strategy.GM_UB]
@@ -535,6 +642,21 @@ def plan_asymmetric(
                 )
                 load[c] += rep_cost
 
+    if access is not None and access["dedup"]:
+        # unique_cap: max expected unique rows over the placed chunks with
+        # 25% headroom (overflow spills to the cold path, so the cap bounds
+        # memory, not correctness), clamped at each chunk's hard ceiling
+        # min(rows, lookups).  Sized WITHOUT the cache exclusion so a cold
+        # cache (post-swap, pre-warm) still dedups within budget.
+        cap = 8.0
+        for a in assignments:
+            t = tables[a.table_idx]
+            f = _uniform_or(freq_of(freqs, a.table_idx), t.rows)
+            n = batch * t.seq / max(a.replicas, 1)
+            u = f.expected_unique(a.row_offset, a.row_offset + a.rows, n)
+            cap = max(cap, min(1.25 * u, float(a.rows), n))
+        access["unique_cap"] = int(-(-int(cap) // 8) * 8)
+
     plan = Plan(
         workload_name=workload.name,
         n_cores=n_cores,
@@ -544,12 +666,16 @@ def plan_asymmetric(
         meta={
             "planner": "asymmetric" + ("+lpt" if lpt else "")
             + ("+rep" if replicate_hot else "")
-            + ("+freq" if freqs is not None else ""),
+            + ("+freq" if freqs is not None else "")
+            + ("+dedup" if dedup else "")
+            + ("+cache" if cache else ""),
             "lif": float(lif(load)) if load.sum() else 1.0,
             "fell_back": fell_back,
             "distribution": _distribution_meta(freqs, len(tables)),
         },
     )
+    if access is not None:
+        plan.meta["cache"] = access
     plan.validate(tables)
     return plan
 

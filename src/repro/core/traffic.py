@@ -18,6 +18,10 @@ Rejoin volume compares the paper's dense ``psum`` against the owner-sharded
 sparse rejoin (``all_to_all`` over held owned-slot rows + ``all_gather`` of
 the owner buckets).  All figures are total bytes sent across the core group
 per executed batch.
+
+:func:`modeled_plan_traffic` additionally reports the access-reduction
+subsystem's pre- vs post-dedup lookup bytes and the residency-cache hit
+rate (DESIGN.md §6) when asked (``dedup=``/``cache_rows=``).
 """
 from __future__ import annotations
 
@@ -26,7 +30,7 @@ from typing import Sequence
 import numpy as np
 
 from repro.core.cost_model import freq_of
-from repro.core.partition import PackedPlan
+from repro.core.partition import PackedPlan, cache_plan_entries
 from repro.core.strategies import Plan, Strategy
 from repro.core.tables import TableSpec
 from repro.kernels.embedding_multi import ragged_block_b
@@ -59,7 +63,8 @@ def modeled_hbm_traffic(
         step_block = np.asarray(packed.step_block)
         br = packed.block_r
         _, batch_chunks = ragged_block_b(
-            batch, seq, e, br, block_b=packed.block_b or None
+            batch, seq, e, br, block_b=packed.block_b or None,
+            unique_cap=packed.unique_cap, cache_rows=packed.cache_rows,
         )
         window_bytes = 0
         for core in range(k):
@@ -135,6 +140,9 @@ def modeled_plan_traffic(
     tables: Sequence[TableSpec],
     batch: int,
     freqs=None,
+    *,
+    dedup: bool = False,
+    cache_rows: int = 0,
 ) -> dict:
     """Expected per-batch HBM *lookup* bytes of a placement under an access
     histogram (DESIGN.md §5) — the drift benchmark's deterministic metric.
@@ -153,17 +161,43 @@ def modeled_plan_traffic(
     figure under skew; a stale plan whose L1 slice went cold pays the full
     GM bill again.  Symmetric-group tables are priced the same way over the
     whole table (UB streams once per core since every core sweeps its own
-    replica of the table)."""
+    replica of the table).
+
+    ``dedup``/``cache_rows`` additionally report the access-reduction
+    subsystem's **post** figures (DESIGN.md §6) under a ``"post"`` key —
+    the pre keys are byte-identical to the PR3 model either way:
+
+    * per GM chunk, cache-resident rows (the same per-core carve
+      ``pack_plan`` materializes, via ``cache_plan_entries``) leave the HBM
+      bill entirely, and with ``dedup`` the surviving lookups pay
+      ``min(lookups, E[unique rows])`` (``RowProbs.expected_unique``);
+    * GM-UB streams the chunk once regardless (dedup-neutral); L1/L1-UB
+      stay at zero; the symmetric group runs outside the fused executor and
+      is never dedup'd.
+    """
+    from repro.data.distributions import RowProbs
+
     total = 0.0
     per_table = [0.0] * len(tables)
     l1_bytes = 0
+    post_wanted = bool(dedup or cache_rows)
+    post_total = 0.0
+    post_per_table = [0.0] * len(tables)
+    cached_lookups = 0.0
+    asym_lookups = 0.0
+    cached_ids: dict[int, list[int]] = {}
+    if post_wanted and cache_rows:
+        for _core, lst in cache_plan_entries(
+            plan, tables, freqs, cache_rows
+        ).items():
+            for _s_i, a, gid, _w in lst:
+                cached_ids.setdefault(id(a), []).append(gid)
     for a in plan.assignments:
         t = tables[a.table_idx]
         f = freq_of(freqs, a.table_idx)
+        lo, hi = a.row_offset, a.row_offset + a.rows
         mass = (
-            f.range_mass(a.row_offset, a.row_offset + a.rows)
-            if f is not None
-            else a.rows / max(t.rows, 1)
+            f.range_mass(lo, hi) if f is not None else a.rows / max(t.rows, 1)
         )
         # replicas split the batch; per-assignment share keeps the total exact
         eff_batch = batch // max(a.replicas, 1)
@@ -176,6 +210,24 @@ def modeled_plan_traffic(
             l1_bytes += a.rows * t.row_bytes
         total += b
         per_table[a.table_idx] += b
+        if post_wanted:
+            n = eff_batch * t.seq
+            asym_lookups += n * mass
+            pb = b
+            if a.strategy is Strategy.GM:
+                fh = f if f is not None else RowProbs.uniform(t.rows)
+                ids = cached_ids.get(id(a), [])
+                cache_mass = fh.mass_of_ids(np.asarray(ids)) if ids else 0.0
+                cached_lookups += n * cache_mass
+                lookups = n * max(mass - cache_mass, 0.0)
+                if dedup:
+                    lookups = min(
+                        lookups,
+                        fh.expected_unique(lo, hi, n, skip_top=len(ids)),
+                    )
+                pb = lookups * t.row_bytes
+            post_total += pb
+            post_per_table[a.table_idx] += pb
     n_cores = max(plan.n_cores, 1)
     for ti, strat in zip(plan.symmetric_tables, plan.symmetric_strategies):
         t = tables[ti]
@@ -188,9 +240,21 @@ def modeled_plan_traffic(
             l1_bytes += t.rows * t.row_bytes
         total += b
         per_table[ti] += b
-    return {
+        post_total += b  # symmetric path: no dedup/cache
+        post_per_table[ti] += b
+    out = {
         "batch": int(batch),
         "hbm_lookup_bytes": int(total),
         "per_table_bytes": [int(b) for b in per_table],
         "l1_resident_bytes": int(l1_bytes),
     }
+    if post_wanted:
+        out["post"] = {
+            "dedup": bool(dedup),
+            "cache_rows": int(cache_rows),
+            "hbm_lookup_bytes": int(post_total),
+            "per_table_bytes": [int(b) for b in post_per_table],
+            "cache_hit_rate": cached_lookups / max(asym_lookups, 1e-30),
+            "reduction_vs_pre": total / max(post_total, 1e-30),
+        }
+    return out

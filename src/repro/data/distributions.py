@@ -107,7 +107,10 @@ class RowProbs:
         n = float(total if total is not None else counts.sum())
         if n <= 0:
             return RowProbs.uniform(rows)
-        order = np.argsort(-counts, kind="stable")
+        # ties sorted by ascending id (not input order): sketch/empirical
+        # histograms must be reproducible across runs — the planner's cache
+        # contents and shadow re-pack plans are derived from this ordering.
+        order = np.lexsort((ids, -counts))
         ids, counts = ids[order], counts[order]
         tail = max(0.0, 1.0 - float(counts.sum()) / n)
         return RowProbs(rows, ids, counts / n, tail)
@@ -158,6 +161,29 @@ class RowProbs:
         extra = max(0, k - len(explicit))
         n_tail = (hi - lo) - int(in_range.sum())
         return min(1.0, float(explicit.sum()) + min(extra, n_tail) * self._tail_per_row)
+
+    def expected_unique(
+        self, lo: int, hi: int, n: float, *, skip_top: int = 0
+    ) -> float:
+        """Expected number of *distinct* rows in ``[lo, hi)`` touched when the
+        table receives ``n`` lookups drawn from this histogram — the analytic
+        dedup factor: a chunk whose lookups pile onto few hot rows needs only
+        ``expected_unique`` HBM row reads per batch once duplicates are folded
+        (E[unique] = Σ_r 1-(1-p_r)^n ≤ n·mass, with equality only when no row
+        repeats).  ``skip_top`` excludes the chunk's ``skip_top`` hottest
+        explicit rows — the ones a residency cache already holds."""
+        lo, hi = max(lo, 0), min(hi, self.rows)
+        if hi <= lo or n <= 0:
+            return 0.0
+        in_range = (self.ids >= lo) & (self.ids < hi)
+        p = self.probs[in_range][skip_top:]  # probs are rank-sorted
+        # 1-(1-p)^n via expm1/log1p: stable for tiny per-row probabilities
+        e = float(-np.expm1(n * np.log1p(-np.minimum(p, 1.0 - 1e-15))).sum())
+        n_tail = (hi - lo) - int(in_range.sum())
+        per = self._tail_per_row
+        if n_tail > 0 and per > 0:
+            e += n_tail * float(-np.expm1(n * math.log1p(-min(per, 1.0 - 1e-15))))
+        return min(e, float(hi - lo))
 
     def effective_rows(self, coverage: float = 0.99) -> int:
         """Fewest rows (by rank) covering ``coverage`` of the access mass —
@@ -593,7 +619,11 @@ class FrequencySketch:
                 fresh.append((c, i))
         if not fresh:
             return
-        fresh.sort(reverse=True)  # admit the heaviest newcomers first
+        # deterministic tie order everywhere (heaviest first, then LOWEST id):
+        # admission, eviction, and the resulting top-k promotion must be
+        # byte-stable across runs so shadow re-pack plans and residency-cache
+        # contents derived from the sketch are reproducible.
+        fresh.sort(key=lambda ci: (-ci[0], ci[1]))
         room = self.capacity - len(self.counts)
         for c, i in fresh[:room]:
             self.counts[i] = c
@@ -603,7 +633,7 @@ class FrequencySketch:
             # one pass (vs an O(capacity) min-scan per inserted id) and give
             # each newcomer its victim's count as the floor.
             victims = heapq.nsmallest(
-                len(overflow), self.counts.items(), key=lambda kv: kv[1]
+                len(overflow), self.counts.items(), key=lambda kv: (kv[1], kv[0])
             )
             for (c, i), (vid, floor) in zip(overflow, victims):
                 del self.counts[vid]

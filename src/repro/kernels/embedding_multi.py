@@ -30,8 +30,27 @@ pass** over the ragged packed buffer (core.partition ``layout="ragged"``):
   output block (``step_base == 0`` marks the first block and init-writes);
   schedule padding steps target a trash slot and init-write zeros there.
 
+Access-reduction subsystem (DESIGN.md §6, both knobs off by default):
+
+* **batch dedup** (``unique_cap > 0``): indices are unique-ized per slot at
+  batch-prep time (sort + first-occurrence ranks, padded to the static
+  ``unique_cap``); each step gathers every unique row in its window exactly
+  once (one-hot ``(U, block_r) @ window`` GEMM) and scatters back to batch
+  rows with the per-slot multiplicity matrix (``(B, U) @ rows`` GEMM) —
+  per-lookup HBM row reads become per-unique-row reads.  Slots whose
+  distinct-row count overflows ``unique_cap`` spill the overflow lookups to
+  the cold row-at-a-time path in the same step (exact, just slower);
+* **hot-row residency cache** (``cache is not None``): a ``(C, E)``
+  mini-table of the core's top-access-mass rows rides a constant-index
+  BlockSpec so it is DMA'd HBM→VMEM once and stays **pinned VMEM-resident
+  across all steps**; lookups pre-split hot/cold by the packed remap table
+  arrive as ``hidx`` cache positions and are resolved with a UB-style
+  conflict-free one-hot GEMM against the resident cache on each slot's
+  first step.
+
 :func:`multi_embedding_bag_dense` is the legacy kernel over the dense
-stacked-slot ``(S, R+1, E)`` layout, kept for layout comparison benchmarks.
+stacked-slot ``(S, R+1, E)`` layout, kept for layout comparison benchmarks
+(no dedup/cache support — ragged only).
 
 Output: (slots, B, E) pooled partials, scatter-added per table by the caller.
 """
@@ -65,19 +84,30 @@ def ragged_block_b(
     *,
     block_b: int | None = None,
     vmem_budget: int = _VMEM_BUDGET,
+    unique_cap: int = 0,
+    cache_rows: int = 0,
 ) -> tuple[int, int]:
     """Resident batch-tile rows and resulting batch chunk count.
 
     Returns ``(block_b, n_chunks)``: the kernel keeps ``block_b`` batch rows
     resident in VMEM; ``n_chunks == 1`` means the whole (padded) batch is
     folded into the one-hot matmul and every buffer window streams once per
-    core.  Shared by the executor and the modeled-traffic accounting.
+    core.  ``unique_cap``/``cache_rows`` charge the dedup multiplicity tile
+    (``block_b × U``), the hot-position tile, and the pinned ``(C, E)``
+    residency cache against the same budget.  Shared by the executor and the
+    modeled-traffic accounting.
     """
     if block_b is None:
         # per batch row: idx (s) + out (e) + count/eq row (block_r) + partial
-        # (e), f32; plus the double-buffered (block_r, E) window itself.
-        per_row = 4 * (seq + 2 * e + block_r)
-        fit = (vmem_budget - 2 * block_r * e * 4) // max(per_row, 1)
+        # (e), f32; plus dedup cnt (U) + hot-position (s) + hot-count (C)
+        # rows when armed; plus the double-buffered (block_r, E) window and
+        # the resident cache itself.
+        per_row = 4 * (
+            seq * (2 if cache_rows else 1)
+            + 2 * e + block_r + unique_cap + cache_rows
+        )
+        fixed = 2 * block_r * e * 4 + cache_rows * e * 4 + unique_cap * 4
+        fit = (vmem_budget - fixed) // max(per_row, 1)
         block_b = max(8, (int(fit) // 8) * 8)
     block_b = min(block_b, _align8(b))
     block_b = max(8, (block_b // 8) * 8)
@@ -91,15 +121,24 @@ def ragged_block_b(
 
 
 def _ragged_kernel(
-    slot_ref, base_ref, blk_ref, strat_ref, idx_ref, window_ref, out_ref,
-    *, block_r: int, seq: int,
+    slot_ref, base_ref, blk_ref, strat_ref, *refs,
+    block_r: int, seq: int, unique_cap: int, cache_rows: int,
 ):
     del slot_ref, blk_ref  # consumed by the index_maps
     t = pl.program_id(0)
     base = base_ref[t]
     strat = strat_ref[t]
-    # UB strategies (GM-UB=1, L1-UB=3) use the vectorized one-hot path.
-    is_ub = (strat == 1) | (strat == 3)
+    refs = list(refs)
+    if unique_cap or cache_rows:
+        # per-step work flags (bit 0: slot has spill, bit 1: slot has
+        # cache hits) — lets the kernel skip guaranteed-zero loops.
+        flags = refs.pop(0)[t]
+    idx_ref = refs.pop(0)  # full lidx, or the overflow spill when dedup'd
+    uniq_ref = refs.pop(0) if unique_cap else None
+    cnt_ref = refs.pop(0) if unique_cap else None
+    hidx_ref = refs.pop(0) if cache_rows else None
+    cache_ref = refs.pop(0) if cache_rows else None
+    window_ref, out_ref = refs
     # (Bt, s) chunk-local indices; -1 / out-of-window never match the iota.
     rel = idx_ref[0] - base
     bt = rel.shape[0]
@@ -130,20 +169,127 @@ def _ragged_kernel(
             0, seq, pos, jnp.zeros((bt, window.shape[1]), jnp.float32)
         )
 
-    partial = jax.lax.cond(is_ub, _ub_onehot, _gm_rowstream)
+    if unique_cap:
+        # dedup'd path (all strategies): gather each unique row in this
+        # window exactly ONCE (one-hot (U, block_r) GEMM), then scatter the
+        # pooled rows back to batch positions with the multiplicity matrix —
+        # per-unique-row reads instead of per-lookup reads, conflict-free by
+        # construction.  idx_ref carries only the unique_cap overflow spill,
+        # row-streamed cold alongside — but only on slots whose flag says
+        # something actually spilled (the common case skips the dead loop).
+        rel_u = uniq_ref[0] - base  # (U,); -1 pads never match
+        equ = (rel_u[:, None] == iota).astype(jnp.float32)  # (U, block_r)
+        rows_u = jnp.dot(equ, window, preferred_element_type=jnp.float32)
+        partial = jnp.dot(
+            cnt_ref[0], rows_u, preferred_element_type=jnp.float32
+        )
+        partial += jax.lax.cond(
+            (flags & 1) > 0,
+            _gm_rowstream,
+            lambda: jnp.zeros((bt, window.shape[1]), jnp.float32),
+        )
+    else:
+        # UB strategies (GM-UB=1, L1-UB=3) use the vectorized one-hot path.
+        is_ub = (strat == 1) | (strat == 3)
+        partial = jax.lax.cond(is_ub, _ub_onehot, _gm_rowstream)
 
     @pl.when(base == 0)
     def _init():
-        out_ref[0] = partial
+        out = partial
+        if cache_rows:
+            # hot lookups resolve against the pinned resident cache with a
+            # UB-style one-hot GEMM, folded in once on the slot's first
+            # step — skipped outright on slots with no cached rows.
+            def _hot_fold():
+                hrel = hidx_ref[0]  # (Bt, s) cache positions, -1 = miss
+                iota_c = jax.lax.broadcasted_iota(
+                    jnp.int32, (1, cache_rows), 1
+                )
+
+                def hcnt(j, c):
+                    return c + (
+                        hrel[:, j][:, None] == iota_c
+                    ).astype(jnp.float32)
+
+                counts_h = jax.lax.fori_loop(
+                    0, seq, hcnt, jnp.zeros((bt, cache_rows), jnp.float32)
+                )
+                return jnp.dot(
+                    counts_h,
+                    cache_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32,
+                )
+
+            out = out + jax.lax.cond(
+                (flags & 2) > 0,
+                _hot_fold,
+                lambda: jnp.zeros((bt, window.shape[1]), jnp.float32),
+            )
+        out_ref[0] = out
 
     @pl.when(base > 0)
     def _acc():
         out_ref[0] += partial
 
 
+def _dedup_indices(
+    lidx: jax.Array, unique_cap: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Batch-prep unique-ization of (S, B, s) chunk-local indices.
+
+    Per slot, over all ``B·s`` lookup positions: sort, rank values by first
+    occurrence, and emit
+
+    * ``uniq``  (S, U)    — the first ``unique_cap`` distinct local ids
+      (``-1`` padding),
+    * ``cnt``   (S, B, U) — per-batch-row multiplicity of each unique id
+      (the scatter/segment-sum matrix),
+    * ``spill`` (S, B, s) — lookups whose id overflowed ``unique_cap``
+      (kept verbatim for the cold row-stream path; ``-1`` elsewhere).
+
+    ``-1`` padding indices never enter the unique set.  Exactness does not
+    depend on the cap: every lookup lands in exactly one of ``cnt``/``spill``.
+    """
+    _, b, seq = lidx.shape
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    rows_of = jnp.arange(b * seq, dtype=jnp.int32) // seq
+
+    def one(l: jax.Array):
+        flat = l.reshape(-1)
+        key = jnp.where(flat < 0, big, flat)
+        order = jnp.argsort(key)
+        sv = key[order]
+        valid = sv < big
+        first = jnp.concatenate([valid[:1], (sv[1:] != sv[:-1]) & valid[1:]])
+        rank = jnp.cumsum(first.astype(jnp.int32)) - 1
+        rank = jnp.where(valid, rank, unique_cap)
+        # unique table: first occurrences below the cap write their value,
+        # everything else lands on the dropped trash entry (always -1).
+        in_cap = first & (rank < unique_cap)
+        uniq = jnp.full((unique_cap + 1,), -1, jnp.int32)
+        uniq = uniq.at[jnp.where(in_cap, rank, unique_cap)].set(
+            jnp.where(in_cap, sv, -1).astype(jnp.int32)
+        )[:unique_cap]
+        # per-position rank in original order -> multiplicity scatter
+        pos_rank = jnp.zeros_like(flat).at[order].set(rank)
+        cnt = (
+            jnp.zeros((b, unique_cap + 1), jnp.float32)
+            .at[rows_of, jnp.minimum(pos_rank, unique_cap)]
+            .add(jnp.where(pos_rank < unique_cap, 1.0, 0.0))[:, :unique_cap]
+        )
+        spill = jnp.where(
+            (pos_rank >= unique_cap) & (flat >= 0), flat, -1
+        ).reshape(b, seq)
+        return uniq, cnt, spill
+
+    return jax.vmap(one)(lidx)
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("block_r", "block_b", "vmem_budget", "interpret"),
+    static_argnames=(
+        "block_r", "block_b", "vmem_budget", "interpret", "unique_cap",
+    ),
 )
 def multi_embedding_bag_ragged(
     buffer: jax.Array,  # (T, E) ragged packed buffer, T % block_r == 0
@@ -157,50 +303,108 @@ def multi_embedding_bag_ragged(
     block_b: int | None = None,
     vmem_budget: int = _VMEM_BUDGET,
     interpret: bool = False,
+    unique_cap: int = 0,  # > 0 arms batch dedup (static cap per slot)
+    cache: jax.Array | None = None,  # (C, E) resident hot-row mini-table
+    hidx: jax.Array | None = None,  # (S, B, s) int32 cache positions, -1 miss
 ) -> jax.Array:
-    """All slots' pooled lookups in one streaming pass -> (S, B, E) f32."""
+    """All slots' pooled lookups in one streaming pass -> (S, B, E) f32.
+
+    ``unique_cap``/``cache``+``hidx`` arm the access-reduction subsystem
+    (module docstring); with both off this is exactly the PR3 kernel.
+    Callers must have already removed cache-hit lookups from ``lidx``
+    (set to ``-1``) wherever ``hidx >= 0`` — the packed remap does this.
+    """
     t_rows, e = buffer.shape
     s_slots, b, seq = lidx.shape
     n_steps = step_slot.shape[0]
     if t_rows % block_r:
         raise ValueError("buffer rows must be a multiple of block_r")
+    cache_rows = 0 if cache is None else int(cache.shape[0])
+    if cache_rows and hidx is None:
+        raise ValueError("cache requires the hidx hot-position tensor")
     bb, n_chunks = ragged_block_b(
-        b, seq, e, block_r, block_b=block_b, vmem_budget=vmem_budget
+        b, seq, e, block_r, block_b=block_b, vmem_budget=vmem_budget,
+        unique_cap=unique_cap, cache_rows=cache_rows,
     )
     pad_b = n_chunks * bb - b
     # trash slot S absorbs schedule padding steps; its indices never match.
     lidx = jnp.pad(lidx, ((0, 1), (0, pad_b), (0, 0)), constant_values=-1)
+    if cache_rows:
+        hidx = jnp.pad(hidx, ((0, 1), (0, pad_b), (0, 0)), constant_values=-1)
+    uniq = cnt = None
+    if unique_cap:
+        # batch-prep dedup over the padded batch: lidx becomes the overflow
+        # spill (usually all -1), uniq/cnt drive the gather/scatter GEMMs.
+        uniq, cnt, lidx = _dedup_indices(lidx, unique_cap)
 
-    kernel = functools.partial(_ragged_kernel, block_r=block_r, seq=seq)
-    prefetch = (
+    kernel = functools.partial(
+        _ragged_kernel, block_r=block_r, seq=seq,
+        unique_cap=unique_cap, cache_rows=cache_rows,
+    )
+    prefetch = [
         step_slot.astype(jnp.int32),
         step_base.astype(jnp.int32),
         step_block.astype(jnp.int32),
         step_strategy.astype(jnp.int32),
+    ]
+    if unique_cap or cache_rows:
+        # per-step work flags: bit 0 = the step's slot has overflow spill,
+        # bit 1 = it has cache hits — the kernel skips guaranteed-zero loops.
+        spill_any = (
+            (lidx >= 0).any(axis=(1, 2)) if unique_cap
+            else jnp.zeros(s_slots + 1, bool)
+        )
+        hot_any = (
+            (hidx >= 0).any(axis=(1, 2)) if cache_rows
+            else jnp.zeros(s_slots + 1, bool)
+        )
+        slot_flags = spill_any.astype(jnp.int32) + 2 * hot_any.astype(
+            jnp.int32
+        )
+        prefetch.append(jnp.take(slot_flags, step_slot.astype(jnp.int32)))
+
+    # the step's slot-indexed batch tiles are resident across the slot's
+    # (consecutive) steps — refetched only on slot change; the (block_r, E)
+    # buffer window is streamed HBM->VMEM exactly once per core, double-
+    # buffered across steps by the pipeline; the cache block's constant
+    # index_map pins it VMEM-resident for the whole grid.  The index_maps
+    # take (t, *prefetch_refs) — variadic since the flags prefetch is only
+    # present when the access-reduction subsystem is armed.
+    in_specs = [
+        pl.BlockSpec((1, bb, seq), lambda t, ss, *_: (ss[t], 0, 0)),
+    ]
+    if unique_cap:
+        in_specs += [
+            pl.BlockSpec((1, unique_cap), lambda t, ss, *_: (ss[t], 0)),
+            pl.BlockSpec(
+                (1, bb, unique_cap), lambda t, ss, *_: (ss[t], 0, 0)
+            ),
+        ]
+    if cache_rows:
+        in_specs += [
+            pl.BlockSpec((1, bb, seq), lambda t, ss, *_: (ss[t], 0, 0)),
+            pl.BlockSpec((cache_rows, e), lambda t, ss, *_: (0, 0)),
+        ]
+    in_specs.append(
+        pl.BlockSpec((block_r, e), lambda t, ss, sb, sk, *_: (sk[t], 0))
     )
 
-    def one_pass(lidx_tile: jax.Array) -> jax.Array:
-        """(S+1, bb, s) resident batch tile -> (S+1, bb, E) pooled."""
+    def one_pass(tiles: dict) -> jax.Array:
+        """Per-batch-chunk resident tiles -> (S+1, bb, E) pooled."""
+        inputs = [tiles["lidx"]]
+        if unique_cap:
+            inputs += [uniq, tiles["cnt"]]
+        if cache_rows:
+            inputs += [tiles["hidx"], cache]
+        inputs.append(buffer)
         return pl.pallas_call(
             kernel,
             grid_spec=pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=4,
+                num_scalar_prefetch=len(prefetch),
                 grid=(n_steps,),
-                in_specs=[
-                    # the step's slot index tile: resident across the slot's
-                    # (consecutive) steps — refetched only on slot change.
-                    pl.BlockSpec(
-                        (1, bb, seq), lambda t, ss, sb, sk, st: (ss[t], 0, 0)
-                    ),
-                    # the step's (block_r, E) row window of the ragged
-                    # buffer: streamed HBM->VMEM exactly once per core,
-                    # double-buffered across steps by the pipeline.
-                    pl.BlockSpec(
-                        (block_r, e), lambda t, ss, sb, sk, st: (sk[t], 0)
-                    ),
-                ],
+                in_specs=in_specs,
                 out_specs=pl.BlockSpec(
-                    (1, bb, e), lambda t, ss, sb, sk, st: (ss[t], 0, 0)
+                    (1, bb, e), lambda t, ss, *_: (ss[t], 0, 0)
                 ),
             ),
             out_shape=jax.ShapeDtypeStruct((s_slots + 1, bb, e), jnp.float32),
@@ -208,18 +412,29 @@ def multi_embedding_bag_ragged(
                 dimension_semantics=("arbitrary",),
             ),
             interpret=interpret,
-        )(*prefetch, lidx_tile, buffer)
+        )(*prefetch, *inputs)
 
+    tiles = {"lidx": lidx}
+    if unique_cap:
+        tiles["cnt"] = cnt
+    if cache_rows:
+        tiles["hidx"] = hidx
     if n_chunks == 1:
-        out = one_pass(lidx)
+        out = one_pass(tiles)
     else:
         # batch exceeds the VMEM budget: chunk it OUTSIDE the pallas_call;
-        # each chunk is one full streaming pass over the buffer.
-        tiles = lidx.reshape(s_slots + 1, n_chunks, bb, seq).transpose(
-            1, 0, 2, 3
-        )
-        out = jax.lax.map(one_pass, tiles)  # (n_chunks, S+1, bb, E)
-        out = out.transpose(1, 0, 2, 3).reshape(s_slots + 1, n_chunks * bb, e)
+        # each chunk is one full streaming pass over the buffer (the unique
+        # table and the resident cache are chunk-invariant and ride along).
+        def split(x):  # (S+1, n_chunks*bb, ...) -> (n_chunks, S+1, bb, ...)
+            shp = x.shape
+            return x.reshape(
+                shp[0], n_chunks, bb, *shp[2:]
+            ).swapaxes(0, 1)
+
+        out = jax.lax.map(
+            one_pass, {k: split(v) for k, v in tiles.items()}
+        )  # (n_chunks, S+1, bb, E)
+        out = out.swapaxes(0, 1).reshape(s_slots + 1, n_chunks * bb, e)
     return out[:s_slots, :b]
 
 

@@ -19,6 +19,13 @@ uniform -> zipf-1.2 -> hot-set-flip matrix) and routes traffic through the
 :class:`repro.serving.server.Server`; ``--replan`` arms the online drift
 trigger + shadow re-pack + parity-checked hot swap, with replan counters
 reported from ``Server.stats()``.
+
+Access-reduction mode (DESIGN.md §6, both default OFF — the escape hatch is
+simply not passing the flags): ``--dedup`` unique-izes each chunk's lookups
+at batch-prep so the fused kernel gathers every unique row once; ``--cache``
+carves the planner-sized hot-row residency cache, pinned VMEM-resident and
+re-materialized on every drift hot swap.  Combine with ``--drift/--replan``
+to watch the cache follow the traffic.
 """
 from __future__ import annotations
 
@@ -81,7 +88,25 @@ def main(argv=None):
     p.add_argument("--autotune", action="store_true",
                    help="sweep the fused kernel's block_r/block_b before "
                         "packing (recorded in plan.meta['tuning'])")
+    p.add_argument("--dedup", action="store_true",
+                   help="batch-level index dedup in the fused executor: "
+                        "unique-ize each chunk's lookups, gather each unique "
+                        "row once, scatter back (DESIGN.md §6; default off)")
+    p.add_argument("--cache", action="store_true",
+                   help="hot-row residency cache: pin the top-access-mass "
+                        "rows VMEM-resident and serve them via a one-hot "
+                        "GEMM, re-carved on every drift hot swap "
+                        "(asymmetric planner only; default off)")
     args = p.parse_args(argv)
+    if (args.dedup or args.cache) and args.planner != "asymmetric":
+        p.error("--dedup/--cache require --planner asymmetric")
+    if (args.dedup or args.cache) and args.layout != "ragged":
+        p.error("--dedup/--cache require --layout ragged")
+    if (args.dedup or args.cache) and args.kernels != "fused":
+        # the XLA gather path ignores the subsystem entirely — a plan priced
+        # on post-dedup traffic would steer placement for a feature the
+        # executor doesn't run.
+        p.error("--dedup/--cache require --kernels fused")
 
     wl = (small_workload(batch=args.batch) if args.workload == "smoke"
           else get_workload(args.workload, args.batch))
@@ -113,6 +138,8 @@ def main(argv=None):
                   else {})
         if freqs is not None:
             kwargs["freqs"] = freqs
+        if args.dedup or args.cache:
+            kwargs.update(dedup=args.dedup, cache=args.cache)
         return PartitionedEmbeddingBag(
             wl, n_cores=n_dev, planner=args.planner, cost_model=model,
             planner_kwargs=kwargs, layout=args.layout,
@@ -159,6 +186,12 @@ def main(argv=None):
                   f"block_b={best['block_b'] or 'auto'} "
                   f"({len(tuning['candidates'])} candidates, "
                   f"backend={tuning['backend']})")
+        acc = bag.plan.meta.get("cache")
+        if acc:
+            print(f"[serve] access-reduction dedup={acc['dedup']} "
+                  f"unique_cap={acc['unique_cap']} "
+                  f"cache_rows={acc['cache_rows']} "
+                  f"(modeled coverage={acc['coverage']:.2%})")
         print(f"[serve] executor kernels={args.kernels} reduce={args.reduce}")
 
     if schedule is not None or args.replan:
@@ -214,6 +247,7 @@ def _serve_drift(args, wl, schedule, freqs0, make_step, step0):
         max_wait_s=0.0,
         layout=dict(step0.bag.layout_summary()),
         exec_mode={"use_kernels": args.kernels, "reduce_mode": args.reduce},
+        cache=dict(step0.bag.plan.meta.get("cache") or {}),
         drift=drift_cfg,
     )
     rng = np.random.default_rng(0)

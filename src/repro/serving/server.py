@@ -124,6 +124,7 @@ class Server:
         n_replicas: int = 2,
         layout: dict | None = None,
         exec_mode: dict | None = None,
+        cache: dict | None = None,
         drift: DriftConfig | None = None,
     ):
         self.step_fn = step_fn
@@ -140,6 +141,10 @@ class Server:
         # deployment-level record of which data-flow path served the traffic.
         self.exec_mode = dict(exec_mode) if exec_mode else {
             "use_kernels": "fused", "reduce_mode": "sparse"}
+        # access-reduction record (plan.meta["cache"]): which dedup width /
+        # residency cache the live plan carries; refreshed on every hot swap
+        # (the shadow re-pack re-carves the cache from the measured sketch).
+        self.cache = dict(cache) if cache else {}
         # drift replanning state
         self.drift = drift
         self.replans = 0
@@ -234,6 +239,12 @@ class Server:
         self.step_fn = shadow  # atomic cut-over
         self.replans += 1
         self._baseline = measured
+        # the shadow re-pack re-materialized the residency cache from the
+        # measured histograms — surface the new carve in stats()
+        bag = getattr(shadow, "bag", None)
+        if bag is not None:
+            self.layout = dict(bag.layout_summary())
+            self.cache = dict(bag.plan.meta.get("cache") or {})
         for sk in self._sketches:
             if sk is not None:
                 sk.reset()
@@ -261,6 +272,8 @@ class Server:
         s["hedged_batches"] = self.hedges
         if self.layout:
             s["layout"] = dict(self.layout)
+        if self.cache:
+            s["cache"] = dict(self.cache)
         s["exec_mode"] = dict(self.exec_mode)
         if self.drift is not None:
             s["replan"] = {

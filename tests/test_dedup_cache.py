@@ -1,0 +1,550 @@
+"""Access-reduction subsystem (DESIGN.md §6): batch-level index dedup +
+hot-row residency cache.
+
+Adversarial parity of the armed fused executor against the pure-jnp oracle
+(all-duplicate, all-unique, unique_cap overflow spill-to-cold, empty slots,
+dedup under batch chunking), cache carve determinism + coherence across a
+drift-triggered hot swap, the planner's selection rules and freqs
+validation, the analytic expected-unique/dedup traffic terms, and the
+dedupbench regression gate.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PartitionedEmbeddingBag,
+    analytic_model,
+    autotune_block_sizes,
+    make_workload,
+    modeled_plan_traffic,
+)
+from repro.core.cost_model import TPU_V5E
+from repro.core.embedding import stack_indices
+from repro.core.partition import (
+    _local_asym_lookup,
+    cache_plan_entries,
+    pack_plan,
+)
+from repro.core.planner import plan_asymmetric, select_access_reduction
+from repro.core.strategies import ChunkAssignment, Plan, Strategy
+from repro.data.distributions import (
+    FrequencySketch,
+    HotSet,
+    RowProbs,
+    Uniform,
+    Zipf,
+    sample_workload,
+    workload_probs,
+)
+
+E = 16
+
+
+def _small_model(l1_bytes=4096):
+    return analytic_model(dataclasses.replace(TPU_V5E, l1_bytes=l1_bytes))
+
+
+def _bag(wl, n_cores=2, l1_bytes=1 << 20, **planner_kwargs):
+    kwargs = dict(lif_threshold=1e9, rock_theta=None)
+    kwargs.update(planner_kwargs)
+    return PartitionedEmbeddingBag(
+        wl, n_cores=n_cores, planner="asymmetric",
+        cost_model=_small_model(l1_bytes), planner_kwargs=kwargs,
+    )
+
+
+def _fused_sum(bag, packed, sidx):
+    return np.asarray(
+        sum(
+            _local_asym_lookup(
+                packed.strip_core(c), sidx, n_tables=bag.n_tables,
+                use_kernels="fused",
+            )
+            for c in range(packed.n_cores)
+        )
+    )
+
+
+def _check_parity(bag, params, idx, packed):
+    want = np.asarray(bag.reference(params, idx))
+    got = _fused_sum(bag, packed, stack_indices(idx, bag.s_max))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# dedup/scatter parity on adversarial batches
+# --------------------------------------------------------------------------
+
+
+def test_all_duplicate_batch():
+    """Every lookup hits the same row: one unique id, multiplicity B·s."""
+    wl = make_workload("dup", [300, 40], dim=E, seqs=[4, 2], batch=16)
+    bag = _bag(wl)
+    params = bag.init(jax.random.PRNGKey(0))
+    idx = [jnp.full((wl.batch, t.seq), 7, jnp.int32) for t in wl.tables]
+    packed = bag.pack(params, unique_cap=8)
+    assert packed.unique_cap == 8
+    _check_parity(bag, params, idx, packed)
+
+
+def test_all_unique_batch():
+    """Every lookup distinct: dedup degenerates to identity (cap >= B·s)."""
+    wl = make_workload("unq", [300, 80], dim=E, seqs=[2, 1], batch=16)
+    bag = _bag(wl)
+    params = bag.init(jax.random.PRNGKey(1))
+    idx = [
+        jnp.asarray(
+            np.random.default_rng(i).permutation(t.rows)[
+                : wl.batch * t.seq
+            ].reshape(wl.batch, t.seq),
+            jnp.int32,
+        )
+        for i, t in enumerate(wl.tables)
+    ]
+    packed = bag.pack(params, unique_cap=wl.batch * 2)
+    _check_parity(bag, params, idx, packed)
+
+
+def test_unique_cap_overflow_spills_to_cold():
+    """More distinct rows than unique_cap: the overflow lookups row-stream
+    through the cold path and the result stays exact."""
+    wl = make_workload("ovf", [500], dim=E, seqs=[4], batch=32)
+    bag = _bag(wl, n_cores=1)
+    params = bag.init(jax.random.PRNGKey(2))
+    # 128 lookups over ~100 distinct rows, cap of 16 -> heavy spill
+    idx = [jax.random.randint(jax.random.PRNGKey(3), (32, 4), 0, 100)]
+    packed = bag.pack(params, unique_cap=16)
+    from repro.kernels.embedding_multi import _dedup_indices
+
+    lidx = stack_indices(idx, 4)[0][None]  # (1, B, s) chunk-local already
+    uniq, cnt, spill = _dedup_indices(jnp.asarray(lidx), 16)
+    assert int((np.asarray(spill) >= 0).sum()) > 0  # overflow actually hit
+    assert int(cnt.sum()) + int((np.asarray(spill) >= 0).sum()) == 32 * 4
+    _check_parity(bag, params, idx, packed)
+
+
+def test_empty_slot_and_padding_core():
+    """A core with zero slots + -1 sequence padding under dedup: all-padding
+    schedules and empty unique sets contribute exact zeros."""
+    wl = make_workload("emp", [100], dim=E, seqs=[2], batch=8)
+    plan = Plan(
+        workload_name="emp", n_cores=2,
+        assignments=(ChunkAssignment(0, 0, 0, 100, Strategy.GM),),
+        symmetric_tables=(), symmetric_strategies=(),
+    )
+    plan.validate(wl.tables)
+    params = [jax.random.normal(jax.random.PRNGKey(0), (100, E), jnp.float32)]
+    packed = pack_plan(plan, wl.tables, params, unique_cap=16)
+    idx = jax.random.randint(jax.random.PRNGKey(1), (wl.batch, 2), 0, 100)
+    sidx = stack_indices([idx], 2)
+    sidx = sidx.at[0, :, 1].set(-1)  # half the positions are seq padding
+    empty = _local_asym_lookup(
+        packed.strip_core(1), sidx, n_tables=1, use_kernels="fused"
+    )
+    np.testing.assert_array_equal(np.asarray(empty), 0.0)
+    got = sum(
+        _local_asym_lookup(
+            packed.strip_core(c), sidx, n_tables=1, use_kernels="fused"
+        )
+        for c in range(2)
+    )
+    g = jnp.take(params[0], jnp.maximum(sidx[0], 0), axis=0)
+    want = jnp.where((sidx[0] >= 0)[..., None], g, 0.0).sum(axis=1)
+    np.testing.assert_allclose(np.asarray(got[0]), np.asarray(want), rtol=1e-5)
+
+
+def test_dedup_under_batch_chunking():
+    """Dedup with a forced block_b: the multiplicity tiles chunk along B
+    with the batch and every chunk re-gathers its window's unique rows."""
+    wl = make_workload("chk", [400, 60], dim=E, seqs=[3, 1], batch=52)
+    bag = _bag(wl)
+    params = bag.init(jax.random.PRNGKey(4))
+    idx = [
+        jax.random.randint(jax.random.PRNGKey(5 + i), (wl.batch, t.seq), 0, 20)
+        for i, t in enumerate(wl.tables)
+    ]
+    packed = bag.pack(params, block_b=16, unique_cap=24)
+    _check_parity(bag, params, idx, packed)
+
+
+def test_cache_parity_and_combined():
+    """Hot rows served from the resident cache (alone and with dedup) match
+    the oracle; the remap actually diverts traffic.  Hand-built GM plan:
+    only GM chunks are carve candidates (UB streams regardless, L1 is
+    already resident), so the cache must sit in front of GM lookups."""
+    wl = make_workload("cch", [2000, 64, 300], dim=E, seqs=[4, 1, 2], batch=32)
+    plan = Plan(
+        workload_name="cch", n_cores=2,
+        assignments=(
+            ChunkAssignment(0, 0, 0, 1000, Strategy.GM),
+            ChunkAssignment(0, 1, 1000, 1000, Strategy.GM),
+            ChunkAssignment(1, 0, 0, 64, Strategy.L1_UB),
+            ChunkAssignment(2, 1, 0, 300, Strategy.GM_UB),
+        ),
+        symmetric_tables=(), symmetric_strategies=(),
+    )
+    plan.validate(wl.tables)
+    freqs = workload_probs(wl, Zipf(1.2))
+    params = [
+        jax.random.normal(jax.random.PRNGKey(6 + i), (t.rows, E), jnp.float32)
+        for i, t in enumerate(wl.tables)
+    ]
+    rng = np.random.default_rng(7)
+    sidx = jnp.asarray(sample_workload(rng, wl, Zipf(1.2), wl.batch))
+
+    def check(packed):
+        got = np.asarray(
+            sum(
+                _local_asym_lookup(
+                    packed.strip_core(c), sidx, n_tables=3,
+                    use_kernels="fused",
+                )
+                for c in range(2)
+            )
+        )
+        outs = []
+        for i, t in enumerate(params):
+            g = jnp.take(t, jnp.maximum(sidx[i], 0), axis=0)
+            outs.append(
+                jnp.where((sidx[i] >= 0)[..., None], g, 0.0).sum(axis=1)
+            )
+        np.testing.assert_allclose(
+            got, np.asarray(jnp.stack(outs)), rtol=1e-5, atol=1e-5
+        )
+
+    for uc, cr in ((0, 64), (48, 0), (48, 64)):  # cache / dedup / both
+        packed = pack_plan(
+            plan, wl.tables, params, unique_cap=uc, cache_rows=cr,
+            freqs=freqs if cr else None,
+        )
+        check(packed)
+    packed = pack_plan(
+        plan, wl.tables, params, unique_cap=48, cache_rows=64, freqs=freqs
+    )
+    remap = np.asarray(packed.cache_remap)
+    assert int((remap >= 0).sum()) > 0
+    assert packed.cache_data.shape[1] == packed.cache_rows
+    # GM-only carve: cached buffer rows all live inside the GM slots' spans
+    entries = cache_plan_entries(plan, wl.tables, freqs, 64)
+    for core, lst in entries.items():
+        for _s, a, gid, _w in lst:
+            assert a.strategy is Strategy.GM
+            assert a.row_offset <= gid < a.row_offset + a.rows
+
+
+def test_cache_rows_requires_freqs_and_ragged():
+    wl = make_workload("err", [100], dim=E, batch=8)
+    plan = plan_asymmetric(wl, 1, _small_model(1 << 20), rock_theta=None)
+    with pytest.raises(ValueError, match="freqs"):
+        pack_plan(plan, wl.tables, None, cache_rows=8)
+    freqs = workload_probs(wl, Zipf(1.2))
+    with pytest.raises(ValueError, match="ragged"):
+        pack_plan(
+            plan, wl.tables, None, layout="dense", unique_cap=8, freqs=freqs
+        )
+
+
+# --------------------------------------------------------------------------
+# planner selection + freqs validation
+# --------------------------------------------------------------------------
+
+
+def test_planner_records_cache_meta():
+    wl = make_workload("meta", [5000, 60], dim=E, seqs=[4, 1], batch=64)
+    freqs = workload_probs(wl, Zipf(1.2))
+    plan = plan_asymmetric(
+        wl, 2, _small_model(), freqs=freqs, dedup=True, cache=True,
+        lif_threshold=1e9, rock_theta=None,
+    )
+    acc = plan.meta["cache"]
+    assert acc["dedup"] is True
+    assert acc["unique_cap"] % 8 == 0 and acc["unique_cap"] > 0
+    assert acc["cache_rows"] % 8 == 0
+    assert 0.0 <= acc["coverage"] <= 1.0
+    assert plan.meta["planner"].endswith("+dedup+cache")
+    # uniform histograms: the cache is pointless and sized to zero
+    acc_u = select_access_reduction(wl.tables, workload_probs(wl, Uniform()))
+    assert acc_u["cache_rows"] == 0
+
+
+def test_unknown_freqs_keys_raise():
+    """Satellite bugfix: histogram entries for tables absent from the
+    workload must raise instead of being silently priced as uniform."""
+    wl = make_workload("val", [100, 200], dim=E, batch=8)
+    model = _small_model()
+    freqs = workload_probs(wl, Zipf(1.2))
+    bad_map = {0: freqs[0], 5: freqs[1]}
+    with pytest.raises(ValueError, match="unknown tables"):
+        plan_asymmetric(wl, 2, model, freqs=bad_map)
+    with pytest.raises(ValueError, match="entries"):
+        plan_asymmetric(wl, 2, model, freqs=freqs + [freqs[0]])
+    from repro.core.planner import plan_baseline, plan_symmetric
+
+    with pytest.raises(ValueError, match="unknown tables"):
+        plan_symmetric(wl, 2, model, freqs={9: freqs[0]})
+    with pytest.raises(ValueError, match="unknown tables"):
+        plan_baseline(wl, 2, model, freqs={-1: freqs[0]})
+    # valid forms still pass: full list, short-keyed mapping
+    plan_asymmetric(wl, 2, model, freqs=freqs)
+    plan_asymmetric(wl, 2, model, freqs={1: freqs[1]})
+
+
+def test_cache_carve_deterministic_ties():
+    """Equal-mass rows carve in (table, id) order — byte-stable across
+    runs/orderings (what shadow re-pack reproducibility needs)."""
+    wl = make_workload("tie", [64, 64], dim=E, batch=8)
+    plan = Plan(
+        workload_name="tie", n_cores=1,
+        assignments=(
+            ChunkAssignment(0, 0, 0, 64, Strategy.GM),
+            ChunkAssignment(1, 0, 0, 64, Strategy.GM),
+        ),
+        symmetric_tables=(), symmetric_strategies=(),
+    )
+    plan.validate(wl.tables)
+    f = RowProbs(64, np.array([5, 3, 9]), np.array([0.2, 0.2, 0.2]), 0.4)
+    entries = cache_plan_entries(plan, wl.tables, [f, f], 4)
+    got = [(a.table_idx, gid) for _s, a, gid, _w in entries[0]]
+    assert got == [(0, 3), (0, 5), (0, 9), (1, 3)]
+
+
+# --------------------------------------------------------------------------
+# analytic terms: expected_unique + modeled post-dedup traffic
+# --------------------------------------------------------------------------
+
+
+def test_expected_unique_closed_forms():
+    rp = RowProbs(1000, np.array([0]), np.array([1.0]), 0.0)  # Fixed
+    assert rp.expected_unique(0, 1000, 512) == pytest.approx(1.0)
+    uni = RowProbs.uniform(4)
+    # 4 rows, 8 draws: E[unique] = 4(1-(3/4)^8)
+    assert uni.expected_unique(0, 4, 8) == pytest.approx(
+        4 * (1 - 0.75 ** 8)
+    )
+    # monotone in n, bounded by the range width and by n·mass
+    z = Zipf(1.2).probs(
+        make_workload("x", [10_000], dim=E, batch=1).tables[0]
+    )
+    u1, u2 = z.expected_unique(0, 10_000, 64), z.expected_unique(0, 10_000, 512)
+    assert 0 < u1 < u2 < 512
+    assert z.expected_unique(0, 100, 512) <= 100
+    # skip_top removes the head's near-certain hits
+    assert z.expected_unique(0, 10_000, 512, skip_top=64) < u2
+
+
+def test_modeled_post_dedup_traffic_2x_under_zipf():
+    """The acceptance claim at test scale: zipf-1.2 post-dedup lookup bytes
+    shrink >= 2x vs the same plan's pre-dedup bill; uniform is unharmed."""
+    model = analytic_model(
+        dataclasses.replace(TPU_V5E, l1_bytes=64 << 10, dma_latency=1e-8)
+    )
+    wl = make_workload(
+        "tr", [200_000, 300], dim=E, batch=256, seqs=[4, 1]
+    )
+    plan = plan_asymmetric(wl, 2, model, lif_threshold=1e9, rock_theta=None)
+    freqs = workload_probs(wl, Zipf(1.2))
+    acc = select_access_reduction(wl.tables, freqs)
+    tr = modeled_plan_traffic(
+        plan, wl.tables, wl.batch, freqs,
+        dedup=True, cache_rows=acc["cache_rows"],
+    )
+    assert tr["post"]["hbm_lookup_bytes"] * 2 <= tr["hbm_lookup_bytes"]
+    assert 0.0 < tr["post"]["cache_hit_rate"] < 1.0
+    uni = workload_probs(wl, Uniform())
+    tru = modeled_plan_traffic(plan, wl.tables, wl.batch, uni, dedup=True)
+    assert tru["post"]["hbm_lookup_bytes"] <= tru["hbm_lookup_bytes"]
+    # pre keys are byte-identical with and without the post request
+    tr0 = modeled_plan_traffic(plan, wl.tables, wl.batch, freqs)
+    assert tr0["hbm_lookup_bytes"] == tr["hbm_lookup_bytes"]
+    assert "post" not in tr0
+
+
+# --------------------------------------------------------------------------
+# sketch determinism (satellite bugfix)
+# --------------------------------------------------------------------------
+
+
+def test_sketch_topk_tie_order_deterministic():
+    """Tied counts promote in ascending id order regardless of stream order
+    or dict insertion history — cache carves reproduce across runs."""
+    streams = (
+        [9, 1, 5, 5, 1, 9, 3, 3],
+        [3, 9, 1, 3, 5, 9, 5, 1],
+        [1, 3, 5, 9, 1, 3, 5, 9],
+    )
+    refs = None
+    for st in streams:
+        sk = FrequencySketch(rows=64, capacity=16)
+        sk.update(np.asarray(st))
+        rp = sk.to_probs()
+        ids = rp.ids.tolist()
+        assert ids == sorted(ids)  # all tied at count 2 -> id order
+        refs = refs if refs is not None else ids
+        assert ids == refs
+    # eviction ties also resolve deterministically
+    sk1, sk2 = FrequencySketch(8, capacity=2), FrequencySketch(8, capacity=2)
+    sk1.update(np.asarray([1, 2]))
+    sk1.update(np.asarray([5, 6]))
+    sk2.update(np.asarray([2, 1]))
+    sk2.update(np.asarray([6, 5]))
+    assert sorted(sk1.counts) == sorted(sk2.counts)
+
+
+# --------------------------------------------------------------------------
+# cache coherence across a drift-triggered hot swap
+# --------------------------------------------------------------------------
+
+
+def test_cache_rematerializes_on_hot_swap():
+    """End-to-end: hot-set traffic trips the drift trigger; the shadow
+    re-pack carves a fresh residency cache from the measured sketch, the
+    swap passes parity, and Server.stats() reports the new carve."""
+    from repro import compat
+    from repro.serving.server import DriftConfig, Server
+
+    # l1_bytes=0: no L1 promotion/hot-split, so the measured hot rows stay
+    # on GM chunks — the (only) place the carve puts them.
+    model = analytic_model(
+        dataclasses.replace(TPU_V5E, l1_bytes=0, dma_latency=1e-8)
+    )
+    wl = make_workload("swap", [50_000, 32], dim=8, seqs=[1, 2], batch=32)
+    mesh = compat.make_mesh((1, jax.device_count()), ("data", "model"))
+    rng = np.random.default_rng(8)
+    tables = [
+        jnp.asarray(rng.standard_normal((t.rows, t.dim)), jnp.float32)
+        for t in wl.tables
+    ]
+
+    def make_step(freqs):
+        bag = PartitionedEmbeddingBag(
+            wl, n_cores=jax.device_count(), planner="asymmetric",
+            cost_model=model,
+            planner_kwargs=dict(
+                freqs=freqs, dedup=True, cache=True,
+                lif_threshold=1e9, rock_theta=None,
+            ),
+        )
+        packed = bag.pack(tables)
+        apply = jax.jit(
+            lambda idx: bag.apply(packed, idx, mesh=mesh, use_kernels=False)
+        )
+
+        def step(payloads):
+            idx = jnp.stack(payloads, axis=1)
+            return np.asarray(jax.block_until_ready(apply(idx)))
+
+        step.bag = bag
+        step.packed = packed
+        return step
+
+    freqs0 = workload_probs(wl, Uniform())
+    step0 = make_step(freqs0)
+    assert step0.packed.cache_rows == 0  # uniform: nothing worth pinning
+    srv = Server(
+        step0, max_batch=wl.batch, max_wait_s=0.0,
+        cache=dict(step0.bag.plan.meta.get("cache") or {}),
+        drift=DriftConfig(
+            baseline=freqs0,
+            extract_indices=lambda p: np.stack(p, axis=1),
+            replan=make_step,
+            check_every=2, patience=2, cooldown=4,
+        ),
+    )
+    assert srv.stats()["cache"]["cache_rows"] == 0
+    hot = HotSet(n_hot=16, hot_mass=0.95)
+    gen = np.random.default_rng(9)
+    for b in range(12):
+        idx = sample_workload(gen, wl, hot, wl.batch)
+        for q in range(wl.batch):
+            srv.submit(idx[:, q])
+        srv.pump()
+    assert srv.replans >= 1 and srv.parity_failures == 0
+    # the swapped plan re-carved the cache from the measured histograms ...
+    new_packed = srv.step_fn.packed
+    assert new_packed.cache_rows > 0
+    assert srv.stats()["cache"]["cache_rows"] > 0
+    # ... and the cached rows are the measured hot set (hot block at id 0)
+    remap = np.asarray(new_packed.cache_remap)
+    assert int((remap >= 0).sum()) > 0
+    # swapped executor stays parity-identical with the armed fused path
+    sidx = jnp.asarray(sample_workload(gen, wl, hot, wl.batch))
+    bag = srv.step_fn.bag
+    want = np.asarray(
+        bag.apply(new_packed, sidx, mesh=mesh, use_kernels=False)
+    )
+    got = np.asarray(bag.apply(new_packed, sidx, mesh=mesh, use_kernels="fused"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# autotune sweep + regression gate
+# --------------------------------------------------------------------------
+
+
+def test_autotune_sweeps_access_reduction():
+    wl = make_workload("tun", [2000, 64], dim=E, seqs=[2, 1], batch=16)
+    freqs = workload_probs(wl, Zipf(1.2))
+    bag = _bag(wl, freqs=freqs, dedup=True, cache=True)
+    best = autotune_block_sizes(
+        bag.plan, wl.tables, batch=wl.batch, block_r_candidates=(64,),
+        unique_cap_candidates=(0, 32), cache_rows_candidates=(0, 16),
+        freqs=freqs, iters=1,
+    )
+    tuning = bag.plan.meta["tuning"]
+    assert len(tuning["candidates"]) == 4
+    assert {"unique_cap", "cache_rows", "wall_us"} <= set(
+        tuning["candidates"][0]
+    )
+    assert best["unique_cap"] in (0, 32) and best["cache_rows"] in (0, 16)
+    # default candidates resolve from plan.meta["cache"] (packed values)
+    best2 = autotune_block_sizes(
+        bag.plan, wl.tables, batch=wl.batch, block_r_candidates=(64,),
+        freqs=freqs, iters=1,
+    )
+    assert best2["unique_cap"] == bag.plan.meta["cache"]["unique_cap"]
+
+
+def test_check_regression_compare_dedup():
+    import sys
+    from pathlib import Path
+
+    sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+    from benchmarks.check_regression import compare_dedup
+
+    base = {
+        "scenarios": [
+            {
+                "name": "zipf-1.2",
+                "pre_bytes": 1000,
+                "post_both_bytes": 250,
+                "reduction_both": 4.0,
+            }
+        ],
+        "invariants": {"zipf_post_dedup_2x": True, "parity_ok": True},
+    }
+    assert compare_dedup(base, json.loads(json.dumps(base))) == []
+    # post bytes regressing past tol fails
+    worse = json.loads(json.dumps(base))
+    worse["scenarios"][0]["post_both_bytes"] = 400
+    assert any("post_both_bytes" in m for m in compare_dedup(base, worse))
+    # reduction factor collapsing fails (direction-flipped gate)
+    collapsed = json.loads(json.dumps(base))
+    collapsed["scenarios"][0]["reduction_both"] = 2.0
+    assert any("reduction_both" in m for m in compare_dedup(base, collapsed))
+    # a *better* reduction passes
+    better = json.loads(json.dumps(base))
+    better["scenarios"][0]["reduction_both"] = 8.0
+    better["scenarios"][0]["post_both_bytes"] = 125
+    assert compare_dedup(base, better) == []
+    # invariant flip fails; parity skipped for modeled-only candidates
+    flipped = json.loads(json.dumps(base))
+    flipped["invariants"]["zipf_post_dedup_2x"] = False
+    assert any("zipf_post_dedup_2x" in m for m in compare_dedup(base, flipped))
+    smoke = json.loads(json.dumps(base))
+    smoke["invariants"]["parity_ok"] = False
+    assert compare_dedup(base, smoke) == []  # no "measured" => parity skipped
