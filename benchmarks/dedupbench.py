@@ -166,24 +166,34 @@ def measured_matrix(batch: int = 128, iters: int = 2, seed: int = 0) -> dict:
     import jax
     import jax.numpy as jnp
 
-    from repro.core import PartitionedEmbeddingBag
     from repro.core.partition import _local_asym_lookup
     from repro.data.distributions import sample_workload
+    from repro.engine import EngineConfig, InferenceEngine
 
     wl = dedup_workload(batch=batch)
-    model = dedup_model()
     out: dict = {"batch": batch, "modes": {}, "parity_ok": True}
     rng = np.random.default_rng(seed)
+    # the SAME uniform-assumption baseline plan the modeled matrix arms:
+    # the big table is a GM chunk, so the carve has something to front.
+    # The engine declares the dedup_model() hardware + planner knobs once
+    # (the build is scenario-invariant); the explicit unique_cap/cache_rows
+    # arming below re-packs through engine.bag (the benchmark sweeps the
+    # knobs off-plan on purpose).
+    engine = InferenceEngine.build(
+        None, wl,
+        EngineConfig(
+            planner="asymmetric",
+            planner_options={"lif_threshold": 1e9, "rock_theta": None},
+            hardware_options={"l1_bytes": 64 << 10, "dma_latency": 1e-8},
+            n_cores=2,
+        ),
+        rng=jax.random.PRNGKey(seed),
+    )
+    bag = engine.bag
+    params = engine.table_data
     for name, dist in SCENARIOS[1:]:  # skewed scenarios exercise the knobs
         freqs = workload_probs(wl, dist)
-        # the SAME uniform-assumption baseline plan the modeled matrix arms:
-        # the big table is a GM chunk, so the carve has something to front.
-        bag = PartitionedEmbeddingBag(
-            wl, n_cores=2, planner="asymmetric", cost_model=model,
-            planner_kwargs=dict(lif_threshold=1e9, rock_theta=None),
-        )
         access = select_access_reduction(wl.tables, freqs)
-        params = bag.init(jax.random.PRNGKey(seed))
         sidx = jnp.asarray(sample_workload(rng, wl, dist, batch))
         idx_list = [sidx[i, :, : t.seq] for i, t in enumerate(wl.tables)]
         want = np.asarray(bag.reference(params, idx_list))
@@ -211,7 +221,12 @@ def measured_matrix(batch: int = 128, iters: int = 2, seed: int = 0) -> dict:
             t0 = time.perf_counter()
             for _ in range(iters):
                 jax.block_until_ready(fn(packed, sidx))
-            packed_meta = bag.plan.meta.get("cache", {}).get("packed", {})
+            # the carve record in plan.meta persists across packs now that
+            # the bag is shared between scenarios — only read it for the
+            # pack that actually carved a cache
+            packed_meta = (
+                bag.plan.meta.get("cache", {}).get("packed", {}) if cr else {}
+            )
             entry[mode] = {
                 "fused_interpret_us": (time.perf_counter() - t0)
                 / iters * 1e6,

@@ -151,14 +151,9 @@ def served_matrix(
     replanned run must actually swap plans at least once)."""
     import jax
 
-    from repro.core import PartitionedEmbeddingBag
-    from repro.serving.server import DriftConfig, Server
-    from repro import compat
+    from repro.engine import EngineConfig, InferenceEngine
 
     wl = drift_workload(batch=batch)
-    model = drift_model()
-    n_dev = jax.device_count()
-    mesh = compat.make_mesh((1, n_dev), ("data", "model"))
     schedule = DriftSchedule(
         [(phase_batches, d) for _, d in SCENARIOS], cycle=False
     )
@@ -168,37 +163,26 @@ def served_matrix(
         for t in wl.tables
     ]
 
-    def make_step(freqs):
-        bag = PartitionedEmbeddingBag(
-            wl, n_cores=n_dev, planner="asymmetric", cost_model=model,
-            planner_kwargs=dict(freqs=freqs) if freqs is not None else {},
-        )
-        packed = bag.pack([jax.numpy.asarray(t) for t in tables])
-        apply = jax.jit(
-            lambda idx: bag.apply(packed, idx, mesh=mesh, use_kernels=False)
-        )
-
-        def step(payloads):
-            idx = jax.numpy.stack(payloads, axis=1)  # (N, B, s)
-            return np.asarray(jax.block_until_ready(apply(idx)))
-
-        return step
-
     freqs0 = workload_probs(wl, SCENARIOS[0][1])
     out = {}
     for mode in ("static", "replanned"):
-        drift_cfg = None
-        if mode == "replanned":
-            drift_cfg = DriftConfig(
-                baseline=freqs0,
-                extract_indices=lambda payloads: np.stack(payloads, axis=1),
-                replan=make_step,
-                check_every=2,
-                patience=2,
-                cooldown=4,
-            )
-        srv = Server(make_step(freqs0), max_batch=batch, max_wait_s=0.0,
-                     drift=drift_cfg)
+        # the declarative spelling of drift_model() + the old hand-built
+        # make_step/DriftConfig chain: one EngineConfig per serving mode
+        config = EngineConfig(
+            planner="asymmetric",
+            use_kernels="xla",
+            hardware_options={"l1_bytes": 64 << 10, "dma_latency": 1e-8},
+            n_cores=jax.device_count(),
+            drift="replan" if mode == "replanned" else "none",
+            drift_options=(
+                {"check_every": 2, "patience": 2, "cooldown": 4}
+                if mode == "replanned" else {}
+            ),
+        )
+        engine = InferenceEngine.build(
+            [jax.numpy.asarray(t) for t in tables], wl, config, freqs=freqs0
+        )
+        srv = engine.serve(max_batch=batch, max_wait_s=0.0)
         rng = np.random.default_rng(seed + 1)
         t0 = time.perf_counter()
         for b in range(schedule.period):

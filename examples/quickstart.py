@@ -1,35 +1,29 @@
-"""Quickstart: plan + execute asymmetric embedding lookups on a device mesh.
+"""Quickstart: the InferenceEngine facade on a forced-host device mesh.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 
-Builds a small workload, plans baseline/symmetric/asymmetric placements with
-the fitted cost model, executes the partitioned lookup on 8 (forced-host)
-devices, checks exactness against the dense oracle, and prints the predicted
-P99 for each plan.
+Declares the whole pipeline with an ``EngineConfig`` (placement policy,
+pricing distribution, hardware), builds it with ``InferenceEngine.build``
+(plan -> access-reduction arming -> pack in one call), executes the
+partitioned lookup, checks exactness against the dense oracle, and prints
+each plan's predicted P99.  The old manual chain (``plan_* -> pack_plan ->
+PartitionedEmbeddingBag``) still exists underneath — ``engine.bag`` /
+``engine.packed`` expose it for composition.
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import dataclasses
-
 import jax
 import numpy as np
 
 from repro import compat
-from repro.core import (
-    PartitionedEmbeddingBag,
-    TPU_V5E,
-    analytic_model,
-    predicted_p99,
-)
 from repro.data.synthetic import query_batch
 from repro.data.workloads import small_workload
+from repro.engine import EngineConfig, InferenceEngine
 
 
 def main():
-    hw = dataclasses.replace(TPU_V5E, l1_bytes=4096)  # tiny L1 to exercise chunking
-    model = analytic_model(hw)
     wl = small_workload(batch=64)
     mesh = compat.make_mesh((2, 4), ("data", "model"))
     rng = np.random.default_rng(0)
@@ -37,16 +31,21 @@ def main():
 
     print(wl.summary())
     for planner in ("baseline", "symmetric", "asymmetric"):
-        bag = PartitionedEmbeddingBag(wl, n_cores=4, planner=planner, cost_model=model)
-        params = bag.init(jax.random.PRNGKey(0))
-        packed = bag.pack(params)
-        out = bag.apply(packed, idx, mesh=mesh)
-        ref = bag.reference(params, idx)
+        config = EngineConfig(
+            planner=planner,
+            n_cores=4,
+            # tiny L1 to exercise chunking (the quickstart's classic knob)
+            hardware_options={"l1_bytes": 4096},
+        )
+        engine = InferenceEngine.build(None, wl, config, mesh=mesh,
+                                       rng=jax.random.PRNGKey(0))
+        out = engine.lookup(idx)
+        ref = engine.bag.reference(engine.table_data, idx)
         err = float(abs(np.asarray(out) - np.asarray(ref)).max())
-        p99 = predicted_p99(model, wl.tables, wl.batch, bag.plan) * 1e6
+        p99 = engine.stats()["predicted_p99_us"]
         print(
-            f"{planner:>10s}: {len(bag.plan.assignments):2d} chunks asym, "
-            f"{len(bag.plan.symmetric_tables):2d} sym | predicted P99 "
+            f"{planner:>10s}: {len(engine.plan.assignments):2d} chunks asym, "
+            f"{len(engine.plan.symmetric_tables):2d} sym | predicted P99 "
             f"{p99:8.1f}us | max err vs dense oracle {err:.2e}"
         )
     print("OK — asymmetric placement executes exactly and is predicted fastest.")

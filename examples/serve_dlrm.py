@@ -1,29 +1,29 @@
-"""Serve a DLRM with batched requests, P99 tracking, and planner comparison.
+"""Serve a DLRM through the engine's request-level API.
 
-Run:  PYTHONPATH=src python examples/serve_dlrm.py [--queries 2048]
+Run:  PYTHONPATH=src python examples/serve_dlrm.py [--queries 1024]
 
-Queries stream through the Batcher -> partitioned embedding + MLPs on an
-8-device (forced-host) mesh; the latency tracker reports the P99/throughput
-trade-off per placement plan and query distribution — the CPU-scale analogue
-of the paper's Table I measurement loop.
+Each query goes in as ``server.submit_request(payload)`` and comes back
+through a Future-style handle holding *that query's* logit; the engine's
+``Batcher`` microbatches behind the scenes (plan -> pack -> fused executor
+-> owner-sharded rejoin on an 8-device forced-host mesh).  The latency
+tracker reports the P99/throughput trade-off per placement plan — the
+CPU-scale analogue of the paper's Table I measurement loop.
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
-import dataclasses
 
 import jax
 import numpy as np
 
 from repro import compat
-from repro.core import PartitionedEmbeddingBag, TPU_V5E, analytic_model
 from repro.data.distributions import Fixed, Uniform, Zipf
 from repro.data.synthetic import ctr_batch
 from repro.data.workloads import small_workload
+from repro.engine import EngineConfig, InferenceEngine
 from repro.models.dlrm import DLRMConfig, forward_packed, init_dlrm
-from repro.serving.server import Server
 
 
 def main():
@@ -32,46 +32,60 @@ def main():
     ap.add_argument("--batch", type=int, default=64)
     args = ap.parse_args()
 
-    hw = dataclasses.replace(TPU_V5E, l1_bytes=8192)
-    model = analytic_model(hw)
     wl = small_workload(batch=args.batch)
     cfg = DLRMConfig(arch="dlrm-serve", workload=wl, embed_dim=16)
     mesh = compat.make_mesh((2, 4), ("data", "model"))
     params = init_dlrm(cfg, jax.random.PRNGKey(0))
 
     for planner in ("symmetric", "asymmetric"):
-        bag = PartitionedEmbeddingBag(wl, n_cores=4, planner=planner, cost_model=model)
-        packed = bag.pack(params["tables"])
+        config = EngineConfig(
+            planner=planner,
+            n_cores=4,
+            hardware_options={"l1_bytes": 8192},
+            max_batch=args.batch,
+            max_wait_s=0.001,
+        )
+        engine = InferenceEngine.build(params["tables"], wl, config, mesh=mesh)
 
-        @jax.jit
-        def infer(dense, indices):
-            # the new executor defaults: schedule-driven fused streaming
-            # kernel + owner-sharded sparse rejoin.
-            return forward_packed(cfg, bag, packed, params,
-                                  {"dense": dense, "indices": indices},
-                                  mesh=mesh, use_kernels="fused",
-                                  reduce_mode="sparse")
+        def make_step(eng):
+            @jax.jit
+            def infer(dense, indices):
+                return forward_packed(cfg, eng.bag, eng.packed, params,
+                                      {"dense": dense, "indices": indices},
+                                      mesh=eng.mesh, use_kernels="fused",
+                                      reduce_mode="sparse")
 
-        def step(payloads):
-            dense = jax.numpy.stack([p["dense"] for p in payloads])
-            idx = jax.numpy.stack([p["indices"] for p in payloads], axis=1)
-            return jax.block_until_ready(infer(dense, idx))
+            def step(payloads):
+                dense = jax.numpy.stack([p["dense"] for p in payloads])
+                idx = jax.numpy.stack([p["indices"] for p in payloads], axis=1)
+                return np.asarray(
+                    jax.block_until_ready(infer(dense, idx))
+                )
 
-        srv = Server(step, max_batch=args.batch, max_wait_s=0.001,
-                     layout=bag.layout_summary(),
-                     exec_mode={"use_kernels": "fused",
-                                "reduce_mode": "sparse"})
+            return step
+
+        # (B,) logits -> one scalar per handle
+        srv = engine.serve(make_step=make_step,
+                           split_fn=lambda out, n: list(out))
         rng = np.random.default_rng(0)
+        handles = []
         for dist in (Uniform(), Zipf(1.05, hot_prefix=False), Fixed()):
             for i in range(args.queries // args.batch):
                 b = ctr_batch(rng, wl, distribution=dist, batch=args.batch)
-                for q in range(args.batch):
-                    srv.submit({"dense": b["dense"][q], "indices": b["indices"][:, q]})
+                handles += [
+                    srv.submit_request(
+                        {"dense": b["dense"][q], "indices": b["indices"][:, q]}
+                    )
+                    for q in range(args.batch)
+                ]
                 srv.pump()
             srv.drain()
+        assert all(h.done() for h in handles)
+        logit0 = float(handles[0].result())
         s = srv.stats()
         print(f"{planner:>10s}: p50={s['p50_us']:8.0f}us p99={s['p99_us']:8.0f}us "
-              f"tps={s['tps']:8.0f} hedged={s['hedged_batches']}")
+              f"tps={s['tps']:8.0f} hedged={s['hedged_batches']} "
+              f"logit[0]={logit0:+.3f}")
     print("OK")
 
 

@@ -14,7 +14,7 @@ Usage::
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,10 @@ def stack_indices(indices: Sequence[jax.Array], s_max: int | None = None):
 class PartitionedEmbeddingBag:
     workload: Workload
     n_cores: int
-    planner: str = "asymmetric"
+    # a PLANNERS name or any callable with the planner signature
+    # (workload, n_cores, model, **kwargs) -> Plan — how InferenceEngine
+    # plugs registered placement policies in (DESIGN.md §7)
+    planner: str | Callable[..., Plan] = "asymmetric"
     cost_model: CostModel | None = None
     dtype: jnp.dtype = jnp.float32
     planner_kwargs: dict = dataclasses.field(default_factory=dict)
@@ -49,7 +52,11 @@ class PartitionedEmbeddingBag:
 
     def __post_init__(self):
         self.cost_model = self.cost_model or analytic_model()
-        plan_fn = planner_lib.PLANNERS[self.planner]
+        plan_fn = (
+            planner_lib.PLANNERS[self.planner]
+            if isinstance(self.planner, str)
+            else self.planner
+        )
         self.plan: Plan = plan_fn(
             self.workload, self.n_cores, self.cost_model, **self.planner_kwargs
         )

@@ -1,0 +1,689 @@
+"""InferenceEngine — the declarative public API facade (DESIGN.md §7).
+
+One object replaces the hand-wired ``plan_asymmetric(freqs=, dedup=,
+cache=)`` → ``pack_plan`` → ``autotune`` → ``PartitionedEmbeddingBag`` /
+``Server(drift=, cache=)`` kwarg chain::
+
+    from repro.engine import EngineConfig, InferenceEngine
+
+    config = EngineConfig(planner="asymmetric", distribution="zipf:1.2",
+                          access="full", tuning="sweep")
+    engine = InferenceEngine.build(table_data, workload, config)
+    pooled = engine.lookup(indices)            # (N, B, E)
+    server = engine.serve()                    # request-level serving
+    handle = server.submit_request(query)      # Future-style handle
+    server.pump(); pooled_one = handle.result()
+    print(engine.plan_report())
+
+``EngineConfig`` is a flat declarative dataclass — every field is a JSON
+scalar or a plain dict, so a served deployment round-trips to/from one JSON
+artifact (:meth:`EngineConfig.save` / :meth:`EngineConfig.load`) and is
+reproducible from it bit-for-bit.
+
+Stage behavior is pluggable through four small ``Protocol``s, each with a
+named registry so third-party policies drop in without touching the engine:
+
+* :class:`PlacementPolicy`   — workload → :class:`~repro.core.strategies.Plan`
+  (builtin names wrap ``plan_baseline``/``plan_symmetric``/``plan_asymmetric``);
+* :class:`AccessReductionPolicy` — which dedup/cache kwargs the planner is
+  armed with (builtin: ``none``/``dedup``/``cache``/``full``);
+* :class:`TuningPolicy`      — block-size selection at pack time (builtin:
+  ``none``/``fixed``/``sweep`` = the :mod:`repro.core.autotune` sweep);
+* :class:`DriftPolicy`       — online-replanning wiring for the server
+  (builtin: ``none``/``replan`` = sketch → trigger → shadow re-pack →
+  parity-checked hot swap via :class:`repro.serving.server.DriftConfig`).
+
+The engine deliberately *delegates* to the existing layers —
+``PartitionedEmbeddingBag`` for plan+pack+apply, ``Server`` for batching —
+so an engine-built lookup is bit-identical to the manual chain; the facade
+adds composition and a stable surface, not a second code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Any, Callable, Mapping, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+__all__ = [
+    "ACCESS_POLICIES",
+    "AccessReductionPolicy",
+    "DRIFT_POLICIES",
+    "DriftPolicy",
+    "EngineConfig",
+    "HARDWARE_PRESETS",
+    "InferenceEngine",
+    "PLACEMENT_POLICIES",
+    "PlacementPolicy",
+    "PolicyRegistry",
+    "TUNING_POLICIES",
+    "TuningPolicy",
+]
+
+
+# --------------------------------------------------------------------------
+# Policy protocols + registries
+# --------------------------------------------------------------------------
+
+
+@runtime_checkable
+class PlacementPolicy(Protocol):
+    """Maps a workload onto cores.  Same signature as the planner functions
+    in :mod:`repro.core.planner`, so any of them (or a third-party callable
+    with the same shape) is a valid policy body."""
+
+    def plan(self, workload, n_cores: int, model, **options):  # -> Plan
+        ...
+
+
+@runtime_checkable
+class AccessReductionPolicy(Protocol):
+    """Chooses the planner's access-reduction arming (DESIGN.md §6): the
+    kwargs merged into the placement call (``dedup=``/``cache=``/sizing)."""
+
+    def planner_kwargs(self, **options) -> dict:
+        ...
+
+
+@runtime_checkable
+class TuningPolicy(Protocol):
+    """Chooses the fused kernel's block sizes at pack time: the kwargs
+    merged into :meth:`PartitionedEmbeddingBag.pack` (``autotune=`` /
+    ``block_r=`` / ``block_b=``)."""
+
+    def pack_kwargs(self, **options) -> dict:
+        ...
+
+
+@runtime_checkable
+class DriftPolicy(Protocol):
+    """Wires online replanning into the server: returns a
+    :class:`repro.serving.server.DriftConfig` (or ``None`` for static
+    serving).  ``baseline``/``extract_indices``/``replan`` are supplied by
+    the engine; ``options`` come from ``EngineConfig.drift_options``."""
+
+    def drift_config(self, *, baseline, extract_indices, replan, **options):
+        ...
+
+
+class PolicyRegistry:
+    """Named factory registry for one policy kind.  ``register`` accepts a
+    zero-arg factory (class or callable) and doubles as a decorator; unknown
+    names raise with the registered alternatives listed."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._factories: dict[str, Callable[[], Any]] = {}
+
+    def register(self, name: str, factory: Callable[[], Any] | None = None):
+        if factory is None:  # decorator form
+            return lambda f: self.register(name, f)
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"{self.kind} policy name must be a non-empty string")
+        self._factories[name] = factory
+        return factory
+
+    def create(self, name: str):
+        if name not in self._factories:
+            raise ValueError(
+                f"unknown {self.kind} policy {name!r}; "
+                f"registered: {self.names()}"
+            )
+        return self._factories[name]()
+
+    def names(self) -> list[str]:
+        return sorted(self._factories)
+
+
+PLACEMENT_POLICIES = PolicyRegistry("placement")
+ACCESS_POLICIES = PolicyRegistry("access-reduction")
+TUNING_POLICIES = PolicyRegistry("tuning")
+DRIFT_POLICIES = PolicyRegistry("drift")
+
+
+class _PlannerPlacement:
+    """Builtin placement: delegate to a :data:`repro.core.planner.PLANNERS`
+    entry — the engine path and the manual chain share the planner code."""
+
+    def __init__(self, planner_name: str):
+        self.planner_name = planner_name
+
+    def plan(self, workload, n_cores, model, **options):
+        from repro.core.planner import PLANNERS
+
+        return PLANNERS[self.planner_name](workload, n_cores, model, **options)
+
+
+for _name in ("baseline", "symmetric", "asymmetric"):
+    PLACEMENT_POLICIES.register(
+        _name, (lambda n: lambda: _PlannerPlacement(n))(_name)
+    )
+
+
+class _AccessArming:
+    def __init__(self, dedup: bool, cache: bool):
+        self.dedup, self.cache = dedup, cache
+
+    def planner_kwargs(self, **options) -> dict:
+        if not (self.dedup or self.cache):
+            return {}
+        return {"dedup": self.dedup, "cache": self.cache, **options}
+
+
+ACCESS_POLICIES.register("none", lambda: _AccessArming(False, False))
+ACCESS_POLICIES.register("dedup", lambda: _AccessArming(True, False))
+ACCESS_POLICIES.register("cache", lambda: _AccessArming(False, True))
+ACCESS_POLICIES.register("full", lambda: _AccessArming(True, True))
+
+
+class _NoTuning:
+    def pack_kwargs(self, **options) -> dict:
+        return {}
+
+
+class _FixedTuning:
+    """Caller-pinned block sizes: ``tuning_options`` pass straight through
+    (``block_r``/``block_b``)."""
+
+    def pack_kwargs(self, **options) -> dict:
+        return {k: options[k] for k in ("block_r", "block_b") if k in options}
+
+
+class _SweepTuning:
+    """The :func:`repro.core.autotune.autotune_block_sizes` compiled sweep,
+    recorded in ``plan.meta["tuning"]`` by ``bag.pack(autotune=True)``."""
+
+    def pack_kwargs(self, **options) -> dict:
+        return {"autotune": True}
+
+
+TUNING_POLICIES.register("none", _NoTuning)
+TUNING_POLICIES.register("fixed", _FixedTuning)
+TUNING_POLICIES.register("sweep", _SweepTuning)
+
+
+class _NoDrift:
+    def drift_config(self, *, baseline, extract_indices, replan, **options):
+        return None
+
+
+class _ReplanDrift:
+    """The PR3 drift state machine: sketch → hysteresis trigger → shadow
+    re-pack → parity-gated hot swap.  ``options`` are DriftConfig knobs
+    (threshold/check_every/patience/cooldown/metric/...)."""
+
+    def drift_config(self, *, baseline, extract_indices, replan, **options):
+        from repro.serving.server import DriftConfig
+
+        return DriftConfig(
+            baseline=baseline,
+            extract_indices=extract_indices,
+            replan=replan,
+            **options,
+        )
+
+
+DRIFT_POLICIES.register("none", _NoDrift)
+DRIFT_POLICIES.register("replan", _ReplanDrift)
+
+
+# --------------------------------------------------------------------------
+# EngineConfig
+# --------------------------------------------------------------------------
+
+
+HARDWARE_PRESETS = ("tpu_v5e", "a100", "ascend_910")
+
+
+def _hardware_presets() -> dict:
+    from repro.core import cost_model
+
+    # single source: each preset name is its cost_model constant, lowercased
+    return {name: getattr(cost_model, name.upper()) for name in HARDWARE_PRESETS}
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Declarative build recipe for :class:`InferenceEngine`.
+
+    Every field is JSON-representable (scalars + plain dicts), so a config
+    round-trips through :meth:`to_json`/:meth:`from_json` and a deployment
+    is reproducible from the one artifact.  Policy fields name registry
+    entries; their ``*_options`` dicts are passed to the policy verbatim.
+
+    ``distribution`` is a CLI-style spec string (``"uniform"``,
+    ``"zipf:1.2"``, ``"hotset:0.01:0.9"``, a workload preset name, …) —
+    the access histograms the plan is priced under; ``None`` keeps the
+    paper's uniform assumption.  A drift-schedule spec uses its phase-0
+    distribution for the initial plan.
+    """
+
+    # placement
+    planner: str = "asymmetric"
+    planner_options: dict = dataclasses.field(default_factory=dict)
+    distribution: str | None = None
+    # access reduction (DESIGN.md §6)
+    access: str = "none"
+    access_options: dict = dataclasses.field(default_factory=dict)
+    # block-size tuning (DESIGN.md §4)
+    tuning: str = "none"
+    tuning_options: dict = dataclasses.field(default_factory=dict)
+    # online replanning (DESIGN.md §5)
+    drift: str = "none"
+    drift_options: dict = dataclasses.field(default_factory=dict)
+    # executor
+    layout: str = "ragged"
+    use_kernels: str = "fused"  # "fused" | "xla"
+    reduce_mode: str = "sparse"  # "sparse" | "psum" | "ring"
+    # hardware / cost model
+    hardware: str = "tpu_v5e"
+    hardware_options: dict = dataclasses.field(default_factory=dict)
+    dtype: str = "float32"
+    n_cores: int | None = None  # None = jax.device_count()
+    # serving
+    max_batch: int = 256
+    max_wait_s: float = 0.0
+
+    def validate(self) -> None:
+        if self.layout not in ("ragged", "dense"):
+            raise ValueError(f"unknown layout {self.layout!r}")
+        if self.use_kernels not in ("fused", "xla"):
+            raise ValueError(
+                f"use_kernels must be 'fused' or 'xla', got {self.use_kernels!r}"
+            )
+        if self.reduce_mode not in ("sparse", "psum", "ring"):
+            raise ValueError(f"unknown reduce_mode {self.reduce_mode!r}")
+        if self.hardware not in _hardware_presets():
+            raise ValueError(
+                f"unknown hardware preset {self.hardware!r}; "
+                f"known: {sorted(_hardware_presets())}"
+            )
+        if self.dtype not in ("float32", "bfloat16", "float16"):
+            raise ValueError(f"unknown dtype {self.dtype!r}")
+        if self.access != "none":
+            # same constraints the serve CLI enforced: the access-reduction
+            # subsystem lives in the fused ragged executor and its knobs are
+            # planner kwargs only plan_asymmetric accepts.
+            if self.planner != "asymmetric":
+                raise ValueError("access reduction requires planner='asymmetric'")
+            if self.layout != "ragged":
+                raise ValueError("access reduction requires layout='ragged'")
+            if self.use_kernels != "fused":
+                raise ValueError("access reduction requires use_kernels='fused'")
+        # fail early on unknown policy names (before any planning work)
+        for reg, name in (
+            (PLACEMENT_POLICIES, self.planner),
+            (ACCESS_POLICIES, self.access),
+            (TUNING_POLICIES, self.tuning),
+            (DRIFT_POLICIES, self.drift),
+        ):
+            reg.create(name)
+
+    # -- JSON round-trip ----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "EngineConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown EngineConfig fields: {unknown}")
+        return cls(**dict(d))
+
+    def to_json(self, **dumps_kwargs) -> str:
+        dumps_kwargs.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **dumps_kwargs)
+
+    @classmethod
+    def from_json(cls, s: str) -> "EngineConfig":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path) -> None:
+        Path(path).write_text(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path) -> "EngineConfig":
+        return cls.from_json(Path(path).read_text())
+
+
+# --------------------------------------------------------------------------
+# InferenceEngine
+# --------------------------------------------------------------------------
+
+
+def _payload_indices(q) -> np.ndarray:
+    """A query payload is either the raw (N, s) index array or a dict with
+    an ``"indices"`` entry (the serving convention)."""
+    return np.asarray(q["indices"] if isinstance(q, Mapping) else q)
+
+
+class InferenceEngine:
+    """The facade: plan → access-reduction arming → pack → (optional)
+    autotune, built once by :meth:`build`, exposing ``lookup`` / ``serve``
+    / ``stats`` / ``plan_report``.
+
+    Attributes useful for composition (e.g. a DLRM forward on top of the
+    packed embeddings): ``bag`` (the :class:`PartitionedEmbeddingBag`),
+    ``packed`` (the :class:`PackedPlan`), ``plan``, ``mesh``, ``freqs``
+    (the histograms the plan was priced under), ``cost_model``.
+    """
+
+    def __init__(
+        self,
+        *,
+        config: EngineConfig,
+        workload,
+        bag,
+        packed,
+        mesh,
+        freqs,
+        table_data,
+        cost_model,
+    ):
+        self.config = config
+        self.workload = workload
+        self.bag = bag
+        self.packed = packed
+        self.mesh = mesh
+        self.freqs = freqs
+        self.cost_model = cost_model
+        self._table_data = table_data
+        self._server = None
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(
+        cls,
+        tables,
+        workload,
+        config: EngineConfig | None = None,
+        *,
+        mesh=None,
+        freqs=None,
+        rng=None,
+    ) -> "InferenceEngine":
+        """Build the full pipeline from a declarative config.
+
+        ``tables`` — per-table (m_i, E) embedding arrays, or ``None`` to
+        initialize fresh parameters (``rng`` seeds them; default key 0), or
+        the string ``"abstract"`` for shape-only packing (dry runs).
+        ``freqs`` overrides ``config.distribution`` with explicit per-table
+        :class:`~repro.data.distributions.RowProbs` (how the drift engine
+        rebuilds from *measured* histograms).
+        """
+        import dataclasses as _dc
+
+        import jax
+
+        from repro import compat
+        from repro.core.cost_model import analytic_model
+        from repro.core.embedding import PartitionedEmbeddingBag
+
+        config = config if config is not None else EngineConfig()
+        config.validate()
+
+        n_cores = config.n_cores or jax.device_count()
+        hw = _hardware_presets()[config.hardware]
+        if config.hardware_options:
+            hw = _dc.replace(hw, **config.hardware_options)
+        model = analytic_model(hw)
+
+        if freqs is None and config.distribution:
+            from repro.data.distributions import (
+                DriftSchedule,
+                get_distribution,
+                workload_probs,
+            )
+
+            dist = get_distribution(config.distribution)
+            if isinstance(dist, DriftSchedule):
+                dist = dist.at(0)
+            freqs = workload_probs(workload, dist)
+
+        placement = PLACEMENT_POLICIES.create(config.planner)
+        access = ACCESS_POLICIES.create(config.access)
+        tuning = TUNING_POLICIES.create(config.tuning)
+
+        planner_kwargs = dict(config.planner_options)
+        planner_kwargs.update(access.planner_kwargs(**config.access_options))
+        if freqs is not None:
+            planner_kwargs["freqs"] = freqs
+
+        import jax.numpy as jnp
+
+        dtype = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+                 "float16": jnp.float16}[config.dtype]
+        bag = PartitionedEmbeddingBag(
+            workload,
+            n_cores=n_cores,
+            planner=placement.plan,
+            cost_model=model,
+            planner_kwargs=planner_kwargs,
+            layout=config.layout,
+            dtype=dtype,
+        )
+        if isinstance(tables, str):
+            if tables != "abstract":
+                raise ValueError(f"unknown tables spec {tables!r}")
+            table_data = None
+        elif tables is None:
+            table_data = bag.init(rng if rng is not None else jax.random.PRNGKey(0))
+        else:
+            table_data = list(tables)
+        packed = bag.pack(table_data, **tuning.pack_kwargs(**config.tuning_options))
+
+        if mesh is None:
+            mesh = compat.make_mesh((1, jax.device_count()), ("data", "model"))
+        return cls(
+            config=config,
+            workload=workload,
+            bag=bag,
+            packed=packed,
+            mesh=mesh,
+            freqs=freqs,
+            table_data=table_data,
+            cost_model=model,
+        )
+
+    def rebuild(self, freqs) -> "InferenceEngine":
+        """Same config + tables, re-planned/re-packed under new histograms —
+        the shadow re-pack the drift policy runs off the hot path."""
+        return InferenceEngine.build(
+            self._table_data if self._table_data is not None else "abstract",
+            self.workload,
+            self.config,
+            mesh=self.mesh,
+            freqs=freqs,
+        )
+
+    # -- execution ----------------------------------------------------------
+
+    @property
+    def plan(self):
+        return self.bag.plan
+
+    @property
+    def table_data(self):
+        return self._table_data
+
+    @property
+    def _use_kernels(self):
+        return "fused" if self.config.use_kernels == "fused" else False
+
+    def lookup(self, indices) -> Any:
+        """Partitioned pooled lookup: per-table index arrays (or the stacked
+        (N, B, s_max) tensor with ``-1`` padding) → (N, B, E).  Exactly
+        ``bag.apply`` under the config's executor knobs — jit-able."""
+        return self.bag.apply(
+            self.packed,
+            indices,
+            mesh=self.mesh,
+            use_kernels=self._use_kernels,
+            reduce_mode=self.config.reduce_mode,
+        )
+
+    def _default_step(self):
+        """payloads (list of queries) → (N, B, E) numpy, jitted once."""
+        import jax
+        import jax.numpy as jnp
+
+        apply = jax.jit(self.lookup)
+
+        def step(payloads):
+            idx = jnp.asarray(
+                np.stack([_payload_indices(q) for q in payloads], axis=1)
+            )
+            return np.asarray(jax.block_until_ready(apply(idx)))
+
+        step.bag = self.bag
+        return step
+
+    @staticmethod
+    def _default_split(out, n: int):
+        """(N, B, E) batch output → per-query (N, E) slices."""
+        return [out[:, i] for i in range(n)]
+
+    def serve(
+        self,
+        *,
+        make_step: Callable[["InferenceEngine"], Callable] | None = None,
+        split_fn: Callable[[Any, int], Sequence[Any]] | None = None,
+        max_batch: int | None = None,
+        max_wait_s: float | None = None,
+        **server_kwargs,
+    ):
+        """Build a :class:`repro.serving.server.Server` driven by this
+        engine: microbatching behind ``submit_request(query) -> handle``,
+        drift replanning per the config's drift policy.
+
+        ``make_step(engine) -> step`` customizes what runs per batch (e.g.
+        a full DLRM forward on ``engine.bag``/``engine.packed``); it is also
+        how a drift hot-swap rebuilds — the policy calls ``make_step`` again
+        on the re-planned engine.  Default: the pooled embedding lookup,
+        with per-query results split as (N, E) slices.
+        """
+        from repro.serving.server import Server
+
+        maker = make_step or (lambda eng: eng._default_step())
+        step0 = maker(self)
+        if getattr(step0, "bag", None) is None:
+            step0.bag = self.bag
+
+        def _replan(measured):
+            shadow_engine = self.rebuild(measured)
+            step = maker(shadow_engine)
+            if getattr(step, "bag", None) is None:
+                step.bag = shadow_engine.bag
+            return step
+
+        baseline = self.freqs
+        if baseline is None:
+            # drift needs something to diff against: the uniform assumption
+            # the plan was implicitly priced under.
+            from repro.data.distributions import RowProbs
+
+            baseline = [RowProbs.uniform(t.rows) for t in self.workload.tables]
+        drift_policy = DRIFT_POLICIES.create(self.config.drift)
+        drift_cfg = drift_policy.drift_config(
+            baseline=baseline,
+            extract_indices=lambda payloads: np.stack(
+                [_payload_indices(q) for q in payloads], axis=1
+            ),
+            replan=_replan,
+            **self.config.drift_options,
+        )
+
+        srv = Server(
+            step0,
+            max_batch=max_batch or self.config.max_batch,
+            max_wait_s=(
+                max_wait_s if max_wait_s is not None else self.config.max_wait_s
+            ),
+            layout=self.bag.layout_summary(),
+            exec_mode={
+                "use_kernels": self.config.use_kernels,
+                "reduce_mode": self.config.reduce_mode,
+            },
+            cache=dict(self.plan.meta.get("cache") or {}),
+            drift=drift_cfg,
+            split_fn=split_fn or self._default_split,
+            **server_kwargs,
+        )
+        self._server = srv
+        return srv
+
+    # -- introspection ------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Plan/layout/tuning/cache summary (+ live server stats if
+        :meth:`serve` was called)."""
+        from repro.core.planner import predicted_p99
+
+        plan = self.plan
+        out = {
+            "workload": self.workload.name,
+            "n_cores": plan.n_cores,
+            "planner": plan.meta.get("planner"),
+            "n_chunks": len(plan.assignments),
+            "n_symmetric": len(plan.symmetric_tables),
+            "lif": plan.meta.get("lif"),
+            "predicted_p99_us": predicted_p99(
+                self.cost_model, self.workload.tables, self.workload.batch,
+                plan, self.freqs,
+            ) * 1e6,
+            "layout": self.bag.layout_summary(),
+            "config": self.config.to_dict(),
+        }
+        for key in ("cache", "tuning", "distribution"):
+            if plan.meta.get(key) is not None:
+                out[key] = plan.meta[key]
+        if self._server is not None:
+            out["server"] = self._server.stats()
+        return out
+
+    def plan_report(self) -> str:
+        """Human-readable build report (what ``launch/serve.py`` prints)."""
+        s = self.stats()
+        lines = [
+            f"workload {self.workload.summary()}",
+            f"plan: {s['n_chunks']} chunks, {s['n_symmetric']} symmetric, "
+            f"{s['n_cores']} cores, planner={s['planner']}, "
+            f"predicted P99 {s['predicted_p99_us']:.1f}us",
+        ]
+        lay = s.get("layout") or {}
+        if lay:
+            lines.append(
+                f"layout={lay['kind']} chunk_bytes={lay['chunk_bytes']:,} "
+                f"(dense would be {lay['dense_bytes']:,}; "
+                f"{lay['bytes_vs_dense']:.2%} of dense, "
+                f"padding_frac={lay['padding_frac']:.2%})"
+            )
+        tuning = s.get("tuning")
+        if tuning and tuning.get("best"):
+            best = tuning["best"]
+            lines.append(
+                f"autotuned block_r={best['block_r']} "
+                f"block_b={best['block_b'] or 'auto'} "
+                f"({len(tuning['candidates'])} candidates, "
+                f"backend={tuning['backend']})"
+            )
+        acc = s.get("cache")
+        if acc:
+            lines.append(
+                f"access-reduction dedup={acc['dedup']} "
+                f"unique_cap={acc['unique_cap']} cache_rows={acc['cache_rows']} "
+                f"(modeled coverage={acc['coverage']:.2%})"
+            )
+        lines.append(
+            f"executor kernels={self.config.use_kernels} "
+            f"reduce={self.config.reduce_mode} layout={self.config.layout}"
+        )
+        if self.config.drift != "none":
+            lines.append(f"drift policy={self.config.drift} "
+                         f"{self.config.drift_options}")
+        return "\n".join(lines)

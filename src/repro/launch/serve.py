@@ -1,53 +1,44 @@
-"""Serving entrypoint: partitioned DLRM inference with SLA tracking.
+"""Serving entrypoint: engine-driven partitioned DLRM inference.
 
     PYTHONPATH=src python -m repro.launch.serve --workload kuairec-big \
-        --batch 512 --queries 4096 --planner asymmetric
+        --batch 512 --queries 4096
 
-Runs the paper's serving pipeline end-to-end on the local device set:
-plan -> pack -> batched queries through the partitioned executor, reporting
-P99 latency + throughput per query distribution.
-
-Distribution-drift mode (DESIGN.md §5):
+The pipeline is declared by an :class:`repro.engine.EngineConfig` — load one
+with ``--config engine.json``, tweak fields with ``--set field=value``
+(JSON-parsed), and persist the resolved artifact with ``--save-config`` so a
+deployment is reproducible from the one file::
 
     PYTHONPATH=src python -m repro.launch.serve --workload smoke \
-        --batch 128 --queries 4096 --drift flip --replan
+        --set access=full --set distribution=zipf:1.2 --save-config eng.json
 
-``--distribution`` accepts the legacy names (uniform/real/fixed/all) plus
-``zipf:<alpha>``, ``hotset:<frac>:<mass>[:<offset>]``, and the per-workload
-preset names; ``--drift`` takes a phase schedule spec (``flip`` = the
-uniform -> zipf-1.2 -> hot-set-flip matrix) and routes traffic through the
-:class:`repro.serving.server.Server`; ``--replan`` arms the online drift
-trigger + shadow re-pack + parity-checked hot swap, with replan counters
-reported from ``Server.stats()``.
+Traffic is a driver concern and stays on its own flags: ``--distribution``
+picks the query stream (``uniform`` / ``zipf:<a>`` /
+``hotset:<frac>:<mass>[:<off>]`` / preset / ``all``), ``--drift`` a phase
+schedule spec (``flip`` = uniform -> zipf-1.2 -> hot-set-flip) routed
+through the request-level :class:`repro.serving.server.Server`.
 
-Access-reduction mode (DESIGN.md §6, both default OFF — the escape hatch is
-simply not passing the flags): ``--dedup`` unique-izes each chunk's lookups
-at batch-prep so the fused kernel gathers every unique row once; ``--cache``
-carves the planner-sized hot-row residency cache, pinned VMEM-resident and
-re-materialized on every drift hot swap.  Combine with ``--drift/--replan``
-to watch the cache follow the traffic.
+Legacy flag spellings (``--planner``, ``--layout``, ``--kernels``,
+``--reduce``, ``--autotune``, ``--dedup``, ``--cache``, ``--replan``,
+``--replan-threshold``) still work: each maps onto the corresponding
+``EngineConfig`` field and emits a ``DeprecationWarning`` naming its
+replacement (see :func:`config_from_args`).
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
+import warnings
+from pathlib import Path
 
-import jax
 import numpy as np
 
-from repro import compat
-from repro.core import PartitionedEmbeddingBag, analytic_model
-from repro.core.cost_model import TPU_V5E
-from repro.data import distributions as dist_lib
-from repro.data.synthetic import ctr_batch
-from repro.data.workloads import WORKLOADS, get_workload, small_workload
-from repro.models.dlrm import DLRMConfig, forward_packed, init_dlrm
-from repro.serving.latency import LatencyTracker
-from repro.serving.server import DriftConfig, Server
+from repro.engine import EngineConfig
 
 
 def _resolve_dists(spec: str) -> list[tuple[str, object]]:
     """CLI --distribution -> [(label, Distribution)]."""
+    from repro.data import distributions as dist_lib
+
     if spec == "all":
         return [
             ("uniform", dist_lib.Uniform()),
@@ -57,105 +48,211 @@ def _resolve_dists(spec: str) -> list[tuple[str, object]]:
     return [(spec, dist_lib.get_distribution(spec))]
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser()
-    p.add_argument("--workload", default="smoke",
-                   choices=["smoke"] + list(WORKLOADS))
-    p.add_argument("--planner", default="asymmetric",
-                   choices=["baseline", "symmetric", "asymmetric"])
-    p.add_argument("--batch", type=int, default=256)
+    # driver flags (what traffic to serve, how much)
+    p.add_argument("--workload", default="smoke")
+    p.add_argument("--batch", type=int, default=None,
+                   help="serving batch size (default: the config's "
+                        "max_batch, 256)")
     p.add_argument("--queries", type=int, default=2048)
     p.add_argument("--distribution", default="real",
-                   help="uniform | real | fixed | all | zipf:<a> | "
-                        "hotset:<frac>:<mass>[:<off>] | <workload preset>")
+                   help="query stream: uniform | real | fixed | all | "
+                        "zipf:<a> | hotset:<frac>:<mass>[:<off>] | "
+                        "<workload preset>")
     p.add_argument("--drift", default=None,
                    help="drift schedule spec routed through the Server, "
                         "e.g. 'flip' or 'uniform@8,zipf:1.2@8,"
                         "hotset:0.01:0.9:-1@8'")
-    p.add_argument("--replan", action="store_true",
-                   help="online replanning: frequency sketch + drift trigger "
-                        "+ shadow re-pack + parity-checked hot swap")
-    p.add_argument("--replan-threshold", type=float, default=0.2,
-                   help="drift distance that counts as a strike")
-    p.add_argument("--layout", default="ragged", choices=["ragged", "dense"],
-                   help="packed chunk layout for the asymmetric executor")
-    p.add_argument("--kernels", default="fused", choices=["fused", "xla"],
-                   help="executor: schedule-driven streaming kernel or XLA gather")
-    p.add_argument("--reduce", default="sparse",
+    # canonical engine surface
+    p.add_argument("--config", type=Path, default=None,
+                   help="EngineConfig JSON artifact to build from")
+    p.add_argument("--set", action="append", default=[], dest="overrides",
+                   metavar="FIELD=VALUE",
+                   help="override an EngineConfig field (VALUE is JSON, "
+                        "e.g. --set access=full --set "
+                        "drift_options='{\"threshold\":0.3}')")
+    p.add_argument("--save-config", type=Path, default=None,
+                   help="write the resolved EngineConfig JSON and continue")
+    # legacy flag spellings — deprecated, mapped onto EngineConfig with a
+    # DeprecationWarning each (None/False defaults detect explicit use)
+    p.add_argument("--planner", default=None,
+                   choices=["baseline", "symmetric", "asymmetric"],
+                   help="[deprecated: --set planner=...]")
+    p.add_argument("--layout", default=None, choices=["ragged", "dense"],
+                   help="[deprecated: --set layout=...]")
+    p.add_argument("--kernels", default=None, choices=["fused", "xla"],
+                   help="[deprecated: --set use_kernels=...]")
+    p.add_argument("--reduce", default=None,
                    choices=["sparse", "psum", "ring"],
-                   help="inter-core rejoin: owner-sharded sparse (default), "
-                        "dense psum, or ring accumulation")
+                   help="[deprecated: --set reduce_mode=...]")
     p.add_argument("--autotune", action="store_true",
-                   help="sweep the fused kernel's block_r/block_b before "
-                        "packing (recorded in plan.meta['tuning'])")
+                   help="[deprecated: --set tuning=sweep]")
     p.add_argument("--dedup", action="store_true",
-                   help="batch-level index dedup in the fused executor: "
-                        "unique-ize each chunk's lookups, gather each unique "
-                        "row once, scatter back (DESIGN.md §6; default off)")
+                   help="[deprecated: --set access=dedup|full]")
     p.add_argument("--cache", action="store_true",
-                   help="hot-row residency cache: pin the top-access-mass "
-                        "rows VMEM-resident and serve them via a one-hot "
-                        "GEMM, re-carved on every drift hot swap "
-                        "(asymmetric planner only; default off)")
-    args = p.parse_args(argv)
-    if (args.dedup or args.cache) and args.planner != "asymmetric":
-        p.error("--dedup/--cache require --planner asymmetric")
-    if (args.dedup or args.cache) and args.layout != "ragged":
-        p.error("--dedup/--cache require --layout ragged")
-    if (args.dedup or args.cache) and args.kernels != "fused":
-        # the XLA gather path ignores the subsystem entirely — a plan priced
-        # on post-dedup traffic would steer placement for a feature the
-        # executor doesn't run.
-        p.error("--dedup/--cache require --kernels fused")
+                   help="[deprecated: --set access=cache|full]")
+    p.add_argument("--replan", action="store_true",
+                   help="[deprecated: --set drift=replan]")
+    p.add_argument("--replan-threshold", type=float, default=None,
+                   help="[deprecated: --set "
+                        "drift_options='{\"threshold\":...}']")
+    return p
 
-    wl = (small_workload(batch=args.batch) if args.workload == "smoke"
-          else get_workload(args.workload, args.batch))
+
+def _warn_legacy(flag: str, replacement: str) -> None:
+    warnings.warn(
+        f"--{flag} is a deprecated spelling; set EngineConfig.{replacement} "
+        f"(via --config / --set) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+# the serve CLI's historical drift-trigger cadence (PR 3) — kept as the
+# defaults the --replan shim fills into drift_options
+_CLI_DRIFT_DEFAULTS = {"check_every": 4, "patience": 2, "cooldown": 8}
+
+
+def config_from_args(args) -> EngineConfig:
+    """Resolve the CLI namespace into one :class:`EngineConfig`.
+
+    Precedence: ``--config`` file (else defaults) < legacy flags (each with
+    a :class:`DeprecationWarning`) < ``--set`` overrides.  Also bakes in the
+    serve CLI's historical choices: ``shard_rocks=True`` for the asymmetric
+    planner (the TPU profile) and the PR3 drift-trigger cadence.
+    """
+    config = (EngineConfig.load(args.config) if args.config
+              else EngineConfig())
+
+    if args.planner is not None:
+        _warn_legacy("planner", "planner")
+        config.planner = args.planner
+    if args.layout is not None:
+        _warn_legacy("layout", "layout")
+        config.layout = args.layout
+    if args.kernels is not None:
+        _warn_legacy("kernels", "use_kernels")
+        config.use_kernels = args.kernels
+    if args.reduce is not None:
+        _warn_legacy("reduce", "reduce_mode")
+        config.reduce_mode = args.reduce
+    if args.autotune:
+        _warn_legacy("autotune", "tuning='sweep'")
+        config.tuning = "sweep"
+    if args.dedup or args.cache:
+        dedup = args.dedup or config.access in ("dedup", "full")
+        cache = args.cache or config.access in ("cache", "full")
+        if args.dedup:
+            _warn_legacy("dedup", "access='dedup' (or 'full')")
+        if args.cache:
+            _warn_legacy("cache", "access='cache' (or 'full')")
+        config.access = {(True, True): "full", (True, False): "dedup",
+                         (False, True): "cache"}[(dedup, cache)]
+    if args.replan:
+        _warn_legacy("replan", "drift='replan'")
+        config.drift = "replan"
+    if args.replan_threshold is not None:
+        # like the old CLI, the threshold alone does NOT arm replanning —
+        # it only takes effect alongside --replan / drift='replan'
+        _warn_legacy("replan-threshold", "drift_options['threshold']")
+        config.drift_options["threshold"] = args.replan_threshold
+    if args.batch is not None:
+        config.max_batch = args.batch
+
+    for spec in args.overrides:
+        field, sep, value = spec.partition("=")
+        if not sep:
+            raise SystemExit(f"--set expects FIELD=VALUE, got {spec!r}")
+        if field not in {f.name for f in EngineConfig.__dataclass_fields__.values()}:
+            raise SystemExit(f"--set: unknown EngineConfig field {field!r}")
+        try:
+            value = json.loads(value)
+        except json.JSONDecodeError:
+            pass  # bare strings: --set access=full
+        setattr(config, field, value)
+
+    if config.drift == "replan":
+        # the serve CLI's historical trigger cadence, however replan was
+        # spelled (--replan, --set drift=replan, or a --config file)
+        for k, v in _CLI_DRIFT_DEFAULTS.items():
+            config.drift_options.setdefault(k, v)
+    # the query stream doubles as the pricing distribution unless the
+    # config pins its own ("all" streams start from the uniform leg)
+    if config.distribution is None and args.distribution:
+        config.distribution = ("uniform" if args.distribution == "all"
+                               else args.distribution)
+    # serve CLI historical default: rocks are row-sharded, not replicated
+    # (per-chip HBM on a pod — DESIGN.md §2)
+    if config.planner == "asymmetric":
+        config.planner_options.setdefault("shard_rocks", True)
+    config.validate()
+    return config
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    known = ["smoke"]
+    from repro.data.workloads import WORKLOADS
+
+    if args.workload not in known + list(WORKLOADS):
+        raise SystemExit(f"unknown workload {args.workload!r}")
+    config = config_from_args(args)
+    batch = config.max_batch  # precedence: --config < --batch < --set
+    if args.save_config:
+        config.save(args.save_config)
+        print(f"[serve] wrote {args.save_config}")
+
+    import jax
+
+    from repro import compat
+    from repro.data import distributions as dist_lib
+    from repro.data.workloads import get_workload, small_workload
+    from repro.engine import InferenceEngine
+    from repro.models.dlrm import DLRMConfig, forward_packed, init_dlrm
+
+    wl = (small_workload(batch=batch) if args.workload == "smoke"
+          else get_workload(args.workload, batch))
     cfg = DLRMConfig(arch=f"dlrm-{args.workload}", workload=wl)
     n_dev = jax.device_count()
     mesh = compat.make_mesh((1, n_dev), ("data", "model"))
-    model = analytic_model(TPU_V5E)
-    use_kernels = "fused" if args.kernels == "fused" else False
     params = init_dlrm(cfg, jax.random.PRNGKey(0))
 
     # size "flip"-style default phases to a third of the run so every phase
     # is actually visited (explicit "@N" specs override per phase)
-    n_batches = max(args.queries // args.batch, 1)
+    n_batches = max(args.queries // batch, 1)
     schedule = (
         dist_lib.parse_drift(args.drift, phase_batches=max(n_batches // 3, 1))
         if args.drift else None
     )
-    if schedule is None:
-        resolved = _resolve_dists(args.distribution)[0][1]
-        if isinstance(resolved, dist_lib.DriftSchedule):
-            # a preset that is itself day-parted (e.g. huawei-25mb) routes
-            # through the drift serving loop like an explicit --drift spec
-            schedule = resolved
+    resolved = _resolve_dists(args.distribution)[0][1]
+    if schedule is None and isinstance(resolved, dist_lib.DriftSchedule):
+        # a preset that is itself day-parted (e.g. huawei-25mb) routes
+        # through the drift serving loop like an explicit --drift spec
+        schedule = resolved
+    # pricing: a --drift schedule prices the initial plan under its phase-0
+    # distribution (an explicit freqs override, like the drift engine's
+    # measured rebuilds); otherwise the engine prices under
+    # config.distribution — the file-pinned spec when a --config set one,
+    # else the traffic spec config_from_args filled in.
+    freqs0 = (
+        dist_lib.workload_probs(wl, schedule.at(0))
+        if schedule is not None else None
+    )
     dist0 = schedule.at(0) if schedule else resolved
-    freqs0 = dist_lib.workload_probs(wl, dist0)
 
-    def make_bag(freqs):
-        kwargs = (dict(shard_rocks=True) if args.planner == "asymmetric"
-                  else {})
-        if freqs is not None:
-            kwargs["freqs"] = freqs
-        if args.dedup or args.cache:
-            kwargs.update(dedup=args.dedup, cache=args.cache)
-        return PartitionedEmbeddingBag(
-            wl, n_cores=n_dev, planner=args.planner, cost_model=model,
-            planner_kwargs=kwargs, layout=args.layout,
-        )
-
-    def make_step(freqs):
-        """(Re)plan + pack + compile one serving step — the shadow re-pack
-        path the drift trigger invokes off the old plan's hot path."""
-        bag = make_bag(freqs)
-        packed = bag.pack(params["tables"], autotune=args.autotune)
+    def make_step(engine):
+        """One serving step over request payloads: the full DLRM forward on
+        the engine's packed embeddings.  Re-invoked by the drift policy on
+        every shadow re-pack."""
 
         @jax.jit
         def infer(batch):
-            return forward_packed(cfg, bag, packed, params, batch, mesh=mesh,
-                                  use_kernels=use_kernels,
-                                  reduce_mode=args.reduce)
+            return forward_packed(
+                cfg, engine.bag, engine.packed, params, batch,
+                mesh=engine.mesh, use_kernels=engine._use_kernels,
+                reduce_mode=engine.config.reduce_mode,
+            )
 
         def step(payloads):
             dense = jax.numpy.stack([q["dense"] for q in payloads])
@@ -164,99 +261,56 @@ def main(argv=None):
                 jax.block_until_ready(infer({"dense": dense, "indices": idx}))
             )
 
-        step.bag = bag
         return step
 
-    def print_plan(bag):
-        print(f"[serve] {wl.summary()}")
-        print(f"[serve] plan: {len(bag.plan.assignments)} chunks, "
-              f"{len(bag.plan.symmetric_tables)} symmetric, {n_dev} devices, "
-              f"planner={bag.plan.meta['planner']}")
-        lay = bag.layout_summary()
-        if lay:
-            print(f"[serve] layout={lay['kind']} "
-                  f"chunk_bytes={lay['chunk_bytes']:,} "
-                  f"(dense would be {lay['dense_bytes']:,}; "
-                  f"{lay['bytes_vs_dense']:.2%} of dense, "
-                  f"padding_frac={lay['padding_frac']:.2%})")
-        tuning = bag.plan.meta.get("tuning")
-        if args.autotune and tuning and tuning.get("best"):
-            best = tuning["best"]
-            print(f"[serve] autotuned block_r={best['block_r']} "
-                  f"block_b={best['block_b'] or 'auto'} "
-                  f"({len(tuning['candidates'])} candidates, "
-                  f"backend={tuning['backend']})")
-        acc = bag.plan.meta.get("cache")
-        if acc:
-            print(f"[serve] access-reduction dedup={acc['dedup']} "
-                  f"unique_cap={acc['unique_cap']} "
-                  f"cache_rows={acc['cache_rows']} "
-                  f"(modeled coverage={acc['coverage']:.2%})")
-        print(f"[serve] executor kernels={args.kernels} reduce={args.reduce}")
+    engine = InferenceEngine.build(
+        params["tables"], wl, config, mesh=mesh, freqs=freqs0
+    )
+    for line in engine.plan_report().splitlines():
+        print(f"[serve] {line}")
 
-    if schedule is not None or args.replan:
-        # plan + pack happen exactly once, inside make_step (the same path
-        # the drift trigger's shadow re-pack uses)
-        step0 = make_step(freqs0)
-        print_plan(step0.bag)
+    # (B,) logits -> one scalar per request handle
+    split = lambda out, n: [out[i] for i in range(n)]  # noqa: E731
+
+    if schedule is not None or config.drift != "none":
         _serve_drift(args, wl, schedule or dist_lib.DriftSchedule(
-            [(1, dist0)], cycle=True), freqs0, make_step, step0)
+            [(1, dist0)], cycle=True), engine, make_step, split,
+            n_dense=cfg.n_dense)
         return
 
-    bag = make_bag(freqs0)
-    packed = bag.pack(params["tables"], autotune=args.autotune)
-    print_plan(bag)
-
-    @jax.jit
-    def infer(batch):
-        return forward_packed(cfg, bag, packed, params, batch, mesh=mesh,
-                              use_kernels=use_kernels, reduce_mode=args.reduce)
-
     rng = np.random.default_rng(0)
+    step0 = make_step(engine)  # one compile serves every traffic label
     for label, dist in _resolve_dists(args.distribution):
-        tracker = LatencyTracker()
-        for i in range(max(args.queries // args.batch, 1)):
-            b = ctr_batch(rng, wl, distribution=dist, batch=args.batch)
-            batch = {k: jax.numpy.asarray(v) for k, v in b.items() if k != "labels"}
-            t0 = time.perf_counter()
-            jax.block_until_ready(infer(batch))
-            tracker.record(time.perf_counter() - t0, queries=args.batch)
-        s = tracker.summary()
+        srv = engine.serve(make_step=lambda eng: step0, split_fn=split)
+        for _ in range(n_batches):
+            b = dist_lib.sample_workload(rng, wl, dist, batch)
+            dense = rng.standard_normal(
+                (batch, cfg.n_dense)).astype(np.float32)
+            handles = [
+                srv.submit_request({"dense": dense[q], "indices": b[:, q]})
+                for q in range(batch)
+            ]
+            srv.pump()
+            assert handles[0].done()
+        srv.drain()
+        s = srv.stats()
         print(f"[serve] dist={label:8s} p50={s['p50_us']:9.0f}us "
               f"p99={s['p99_us']:9.0f}us tps={s['tps']:9.0f}")
 
 
-def _serve_drift(args, wl, schedule, freqs0, make_step, step0):
-    """Drive the Server through the drift schedule (optionally replanning)."""
-    drift_cfg = None
-    if args.replan:
-        drift_cfg = DriftConfig(
-            baseline=freqs0,
-            extract_indices=lambda payloads: np.stack(
-                [np.asarray(q["indices"]) for q in payloads], axis=1
-            ),
-            replan=lambda measured: make_step(measured),
-            threshold=args.replan_threshold,
-            check_every=4,
-            patience=2,
-            cooldown=8,
-        )
-    srv = Server(
-        step0,
-        max_batch=args.batch,
-        max_wait_s=0.0,
-        layout=dict(step0.bag.layout_summary()),
-        exec_mode={"use_kernels": args.kernels, "reduce_mode": args.reduce},
-        cache=dict(step0.bag.plan.meta.get("cache") or {}),
-        drift=drift_cfg,
-    )
+def _serve_drift(args, wl, schedule, engine, make_step, split, *, n_dense):
+    """Drive the engine-built Server through the drift schedule."""
+    from repro.data import distributions as dist_lib
+
+    srv = engine.serve(make_step=make_step, split_fn=split)
     rng = np.random.default_rng(0)
-    n_batches = max(args.queries // args.batch, 1)
+    batch = engine.config.max_batch
+    n_batches = max(args.queries // batch, 1)
     for b in range(n_batches):
         dist = schedule.at(b)
-        idx = dist_lib.sample_workload(rng, wl, dist, args.batch)
-        dense = rng.standard_normal((args.batch, 13)).astype(np.float32)
-        for q in range(args.batch):
+        idx = dist_lib.sample_workload(rng, wl, dist, batch)
+        dense = rng.standard_normal((batch, n_dense)).astype(np.float32)
+        for q in range(batch):
             srv.submit({"dense": dense[q], "indices": idx[:, q]})
         srv.pump()
     srv.drain()

@@ -6,6 +6,11 @@ A deployment-shaped serving layer exercised at CPU scale:
   max_wait), the knob that trades P99 latency against throughput (paper
   Fig. 4's x-axis is exactly this batch size);
 * ``Server`` — runs a jitted step over released batches, records latencies;
+* request-level API — ``submit_request(payload) -> RequestHandle``: a
+  Future-style handle filled with *that query's* slice of the batch output
+  when the batch it rode in executes (``split_fn`` splits the batch result;
+  default: index the leading axis).  The fire-and-forget ``submit`` remains
+  for callers that only want batch outputs from ``pump()``;
 * hedged requests — if a batch's execution exceeds ``hedge_factor`` x the
   median, a backup execution is launched (simulated duplicate here) and the
   faster result wins: classic tail-taming for stragglers;
@@ -36,13 +41,48 @@ import numpy as np
 from repro.data.distributions import FrequencySketch, drift_distance
 from repro.serving.latency import LatencyTracker
 
-__all__ = ["Query", "Batcher", "DriftConfig", "Server"]
+__all__ = ["Query", "Batcher", "DriftConfig", "RequestHandle", "Server"]
+
+_PENDING = object()
+
+
+class RequestHandle:
+    """Future-style result of one submitted query.
+
+    Filled (or failed) when the batch containing the query executes in
+    :meth:`Server.pump`; ``result()`` before that raises ``RuntimeError``
+    (the serving loop is synchronous — ``pump()``/``drain()`` drive it)."""
+
+    __slots__ = ("_result", "_error")
+
+    def __init__(self):
+        self._result: Any = _PENDING
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._result is not _PENDING or self._error is not None
+
+    def result(self) -> Any:
+        if self._error is not None:
+            raise self._error
+        if self._result is _PENDING:
+            raise RuntimeError(
+                "request not served yet — pump()/drain() the server first"
+            )
+        return self._result
+
+    def _set(self, value: Any) -> None:
+        self._result = value
+
+    def _set_error(self, err: BaseException) -> None:
+        self._error = err
 
 
 @dataclasses.dataclass
 class Query:
     payload: Any
     t_enqueue: float
+    handle: RequestHandle | None = None
 
 
 class Batcher:
@@ -51,8 +91,15 @@ class Batcher:
         self.max_wait_s = max_wait_s
         self.queue: list[Query] = []
 
-    def submit(self, payload: Any, now: float | None = None) -> None:
-        self.queue.append(Query(payload, now if now is not None else time.perf_counter()))
+    def submit(
+        self,
+        payload: Any,
+        now: float | None = None,
+        handle: RequestHandle | None = None,
+    ) -> None:
+        self.queue.append(
+            Query(payload, now if now is not None else time.perf_counter(), handle)
+        )
 
     def maybe_release(self, now: float | None = None) -> list[Query] | None:
         now = now if now is not None else time.perf_counter()
@@ -126,9 +173,13 @@ class Server:
         exec_mode: dict | None = None,
         cache: dict | None = None,
         drift: DriftConfig | None = None,
+        split_fn: Callable[[Any, int], Sequence[Any]] | None = None,
     ):
         self.step_fn = step_fn
         self.batcher = Batcher(max_batch, max_wait_s)
+        # batch output -> per-query results for submit_request handles;
+        # default indexes the leading (batch) axis.
+        self.split_fn = split_fn or (lambda out, n: [out[i] for i in range(n)])
         self.tracker = LatencyTracker()
         self.hedge_factor = hedge_factor
         self.n_replicas = max(n_replicas, 1)
@@ -170,6 +221,13 @@ class Server:
     def submit(self, payload: Any) -> None:
         self.batcher.submit(payload)
 
+    def submit_request(self, payload: Any) -> RequestHandle:
+        """Request-level entry: enqueue one query, get a Future-style handle
+        whose ``result()`` is that query's slice of the batch output."""
+        handle = RequestHandle()
+        self.batcher.submit(payload, handle=handle)
+        return handle
+
     def pump(self) -> Any | None:
         """Release + execute one batch if ready. Returns results or None."""
         batch = self.batcher.maybe_release()
@@ -192,6 +250,22 @@ class Server:
         now = time.perf_counter()
         for q in batch:
             self.tracker.record(now - q.t_enqueue, queries=1)
+        if any(q.handle is not None for q in batch):
+            try:
+                parts = list(self.split_fn(out, len(batch)))
+                if len(parts) != len(batch):
+                    raise ValueError(
+                        f"split_fn returned {len(parts)} parts for a "
+                        f"{len(batch)}-query batch"
+                    )
+            except Exception as e:  # a bad split fails the handles, not pump
+                for q in batch:
+                    if q.handle is not None:
+                        q.handle._set_error(e)
+            else:
+                for q, r in zip(batch, parts):
+                    if q.handle is not None:
+                        q.handle._set(r)
         if self.drift is not None:
             self._observe(payloads, out)
         return out

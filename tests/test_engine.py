@@ -1,0 +1,347 @@
+"""InferenceEngine facade: parity with the manual chain, EngineConfig JSON
+round-trip, policy registries, and the request-level serving API."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro import compat
+from repro.core import PartitionedEmbeddingBag
+from repro.data.distributions import (
+    HotSet,
+    Uniform,
+    Zipf,
+    sample_workload,
+    workload_probs,
+)
+from repro.data.workloads import small_workload
+from repro.engine import (
+    ACCESS_POLICIES,
+    DRIFT_POLICIES,
+    EngineConfig,
+    InferenceEngine,
+    PLACEMENT_POLICIES,
+    PolicyRegistry,
+    TUNING_POLICIES,
+)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return compat.make_mesh((1, jax.device_count()), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return small_workload(batch=16)
+
+
+@pytest.fixture(scope="module")
+def params(wl):
+    bag = PartitionedEmbeddingBag(wl, n_cores=1)
+    return bag.init(jax.random.PRNGKey(0))
+
+
+def _indices(wl, dist, seed=0, batch=None):
+    rng = np.random.default_rng(seed)
+    return jax.numpy.asarray(
+        sample_workload(rng, wl, dist, batch or wl.batch)
+    )
+
+
+# -----------------------------------------------------------------------
+# build parity vs the manual plan -> pack -> apply chain
+# -----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "spec,dist",
+    [(None, Uniform()), ("zipf:1.2", Zipf(1.2))],
+    ids=["uniform", "zipf"],
+)
+def test_engine_matches_manual_chain(wl, params, mesh, spec, dist):
+    """InferenceEngine.build reproduces the manual plan_asymmetric ->
+    pack_plan -> PartitionedEmbeddingBag chain bit-for-bit."""
+    kwargs = {}
+    if spec is not None:
+        kwargs["freqs"] = workload_probs(wl, dist)
+    bag = PartitionedEmbeddingBag(
+        wl, n_cores=1, planner="asymmetric", planner_kwargs=kwargs
+    )
+    packed = bag.pack(params)
+    idx = _indices(wl, dist)
+    ref = np.asarray(bag.apply(packed, idx, mesh=mesh))
+
+    engine = InferenceEngine.build(
+        params, wl, EngineConfig(distribution=spec, n_cores=1), mesh=mesh
+    )
+    out = np.asarray(engine.lookup(idx))
+    assert np.array_equal(out, ref)
+    assert engine.plan.meta["planner"] == bag.plan.meta["planner"]
+
+
+def test_engine_matches_manual_chain_with_access_reduction(wl, params, mesh):
+    freqs = workload_probs(wl, Zipf(1.2))
+    bag = PartitionedEmbeddingBag(
+        wl, n_cores=1, planner="asymmetric",
+        planner_kwargs=dict(freqs=freqs, dedup=True, cache=True),
+    )
+    packed = bag.pack(params)
+    idx = _indices(wl, Zipf(1.2))
+    ref = np.asarray(bag.apply(packed, idx, mesh=mesh))
+
+    engine = InferenceEngine.build(
+        params, wl,
+        EngineConfig(distribution="zipf:1.2", access="full", n_cores=1),
+        mesh=mesh,
+    )
+    assert np.array_equal(np.asarray(engine.lookup(idx)), ref)
+    assert engine.plan.meta["cache"] == bag.plan.meta["cache"]
+
+
+def test_engine_abstract_and_fresh_tables(wl, mesh):
+    eng = InferenceEngine.build(
+        "abstract", wl, EngineConfig(n_cores=1), mesh=mesh
+    )
+    assert eng.table_data is None
+    eng2 = InferenceEngine.build(
+        None, wl, EngineConfig(n_cores=1), mesh=mesh,
+        rng=jax.random.PRNGKey(7),
+    )
+    assert len(eng2.table_data) == len(wl.tables)
+    with pytest.raises(ValueError, match="unknown tables spec"):
+        InferenceEngine.build("bogus", wl, EngineConfig(n_cores=1))
+
+
+# -----------------------------------------------------------------------
+# EngineConfig JSON round-trip
+# -----------------------------------------------------------------------
+
+
+def test_config_json_roundtrip_identical_plan(wl, params, mesh, tmp_path):
+    """save -> load -> the rebuilt engine's plan/pack is identical,
+    including plan.meta['cache'] and plan.meta['distribution']."""
+    config = EngineConfig(
+        distribution="zipf:1.2", access="full",
+        access_options={"cache_target": 0.6}, n_cores=1,
+        planner_options={"lpt": True},
+    )
+    path = tmp_path / "engine.json"
+    config.save(path)
+    loaded = EngineConfig.load(path)
+    assert loaded == config
+
+    a = InferenceEngine.build(params, wl, config, mesh=mesh)
+    b = InferenceEngine.build(params, wl, loaded, mesh=mesh)
+    assert a.plan.meta["cache"] == b.plan.meta["cache"]
+    assert a.plan.meta["distribution"] == b.plan.meta["distribution"]
+    assert a.plan.assignments == b.plan.assignments
+    assert a.bag.layout_summary() == b.bag.layout_summary()
+    idx = _indices(wl, Zipf(1.2))
+    assert np.array_equal(
+        np.asarray(a.lookup(idx)), np.asarray(b.lookup(idx))
+    )
+
+
+def test_config_rejects_unknown_fields_and_values():
+    with pytest.raises(ValueError, match="unknown EngineConfig fields"):
+        EngineConfig.from_dict({"planner": "asymmetric", "bogus": 1})
+    with pytest.raises(ValueError, match="unknown layout"):
+        EngineConfig(layout="diagonal").validate()
+    with pytest.raises(ValueError, match="use_kernels"):
+        EngineConfig(use_kernels="pallas").validate()
+    # the access-reduction subsystem's structural requirements
+    with pytest.raises(ValueError, match="planner='asymmetric'"):
+        EngineConfig(access="full", planner="baseline").validate()
+    with pytest.raises(ValueError, match="layout='ragged'"):
+        EngineConfig(access="dedup", layout="dense").validate()
+    with pytest.raises(ValueError, match="use_kernels='fused'"):
+        EngineConfig(access="cache", use_kernels="xla").validate()
+
+
+# -----------------------------------------------------------------------
+# policy registries
+# -----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "registry",
+    [PLACEMENT_POLICIES, ACCESS_POLICIES, TUNING_POLICIES, DRIFT_POLICIES],
+    ids=lambda r: r.kind,
+)
+def test_registry_unknown_name_lists_alternatives(registry):
+    with pytest.raises(ValueError) as e:
+        registry.create("no-such-policy")
+    assert registry.kind in str(e.value)
+    for name in registry.names():
+        assert name in str(e.value)
+
+
+def test_unknown_policy_name_fails_config_validate():
+    with pytest.raises(ValueError, match="unknown placement policy"):
+        EngineConfig(planner="no-such").validate()
+    with pytest.raises(ValueError, match="unknown tuning policy"):
+        EngineConfig(tuning="no-such").validate()
+
+
+def test_custom_placement_policy_registration(wl, params, mesh):
+    """A third-party policy registers by name and drives the build."""
+    from repro.core.planner import plan_symmetric
+
+    class EverythingSymmetric:
+        def plan(self, workload, n_cores, model, **options):
+            options.pop("freqs", None)
+            return plan_symmetric(workload, n_cores, model)
+
+    PLACEMENT_POLICIES.register("test-symmetric", EverythingSymmetric)
+    try:
+        eng = InferenceEngine.build(
+            params, wl,
+            EngineConfig(planner="test-symmetric", n_cores=1), mesh=mesh,
+        )
+        assert eng.plan.meta["planner"] == "symmetric"
+        assert len(eng.plan.assignments) == 0
+        ref = PartitionedEmbeddingBag(wl, n_cores=1, planner="symmetric")
+        idx = _indices(wl, Uniform())
+        assert np.array_equal(
+            np.asarray(eng.lookup(idx)),
+            np.asarray(ref.apply(ref.pack(params), idx, mesh=mesh)),
+        )
+    finally:
+        del PLACEMENT_POLICIES._factories["test-symmetric"]
+
+
+def test_registry_decorator_and_bad_name():
+    reg = PolicyRegistry("demo")
+
+    @reg.register("thing")
+    class Thing:
+        pass
+
+    assert isinstance(reg.create("thing"), Thing)
+    assert reg.names() == ["thing"]
+    with pytest.raises(ValueError, match="non-empty string"):
+        reg.register("", lambda: None)
+
+
+# -----------------------------------------------------------------------
+# request-level serving
+# -----------------------------------------------------------------------
+
+
+def test_request_level_serving_handles(wl, params, mesh):
+    engine = InferenceEngine.build(
+        params, wl, EngineConfig(n_cores=1, max_wait_s=0.0), mesh=mesh
+    )
+    idx = np.asarray(_indices(wl, Zipf(1.2), batch=8))
+    expected = np.asarray(engine.lookup(jax.numpy.asarray(idx)))
+
+    srv = engine.serve(max_batch=8)
+    handles = [srv.submit_request(idx[:, q]) for q in range(8)]
+    assert not handles[0].done()
+    with pytest.raises(RuntimeError, match="not served yet"):
+        handles[0].result()
+    srv.pump()
+    assert all(h.done() for h in handles)
+    for q, h in enumerate(handles):
+        np.testing.assert_array_equal(np.asarray(h.result()), expected[:, q])
+    # fire-and-forget submit still works alongside
+    srv.submit(idx[:, 0])
+    out = None
+    while out is None:
+        out = srv.pump()
+    assert out.shape[0] == len(wl.tables)
+
+
+def test_request_handle_split_error(wl, params, mesh):
+    engine = InferenceEngine.build(
+        params, wl, EngineConfig(n_cores=1, max_wait_s=0.0), mesh=mesh
+    )
+
+    def bad_split(out, n):
+        raise KeyError("broken split")
+
+    srv = engine.serve(max_batch=2, split_fn=bad_split)
+    idx = np.asarray(_indices(wl, Uniform(), batch=2))
+    h = srv.submit_request(idx[:, 0])
+    srv.submit_request(idx[:, 1])
+    srv.pump()
+    assert h.done()
+    with pytest.raises(KeyError, match="broken split"):
+        h.result()
+    # a split returning the wrong count must fail the handles too, not
+    # leave the tail pending forever
+    srv2 = engine.serve(max_batch=2, split_fn=lambda out, n: [out[:, 0]])
+    h2 = srv2.submit_request(idx[:, 0])
+    h3 = srv2.submit_request(idx[:, 1])
+    srv2.pump()
+    assert h2.done() and h3.done()
+    with pytest.raises(ValueError, match="1 parts for a 2-query batch"):
+        h3.result()
+
+
+def test_engine_drift_replan_end_to_end(wl, params, mesh):
+    """The drift policy wires sketch -> trigger -> engine.rebuild -> parity
+    -> hot swap; the server's layout/cache records refresh on the swap."""
+    engine = InferenceEngine.build(
+        params, wl,
+        EngineConfig(
+            n_cores=1, use_kernels="xla", distribution="uniform",
+            drift="replan",
+            drift_options={"check_every": 2, "patience": 1, "cooldown": 2,
+                           "threshold": 0.05},
+        ),
+        mesh=mesh,
+    )
+    srv = engine.serve(max_batch=16)
+    rng = np.random.default_rng(3)
+    hot = HotSet(n_hot=8, hot_mass=0.98)
+    for _ in range(8):
+        idx = sample_workload(rng, wl, hot, 16)
+        for q in range(16):
+            srv.submit(idx[:, q])
+        srv.pump()
+    s = srv.stats()
+    assert s["replan"]["replans"] >= 1
+    assert s["replan"]["parity_failures"] == 0
+    # the swapped-in step carries the re-planned bag
+    assert srv.step_fn.bag is not engine.bag
+    assert "+freq" in srv.step_fn.bag.plan.meta["planner"]
+
+
+# -----------------------------------------------------------------------
+# introspection
+# -----------------------------------------------------------------------
+
+
+def test_stats_and_plan_report(wl, params, mesh):
+    engine = InferenceEngine.build(
+        params, wl,
+        EngineConfig(distribution="zipf:1.2", access="full", n_cores=1),
+        mesh=mesh,
+    )
+    s = engine.stats()
+    assert s["workload"] == wl.name
+    assert s["n_chunks"] == len(engine.plan.assignments)
+    assert s["predicted_p99_us"] > 0
+    assert s["config"] == engine.config.to_dict()
+    assert s["cache"]["dedup"] is True
+    report = engine.plan_report()
+    assert "access-reduction" in report and "planner=" in report
+    # serving stats fold in once a server exists
+    engine.serve(max_batch=4)
+    assert "server" in engine.stats()
+
+
+def test_engine_config_dataclass_fields_json_representable():
+    """Every EngineConfig field must survive JSON (the one-artifact
+    reproducibility contract)."""
+    cfg = EngineConfig()
+    for f in dataclasses.fields(cfg):
+        v = getattr(cfg, f.name)
+        assert v is None or isinstance(v, (str, int, float, bool, dict)), (
+            f.name
+        )
+    assert EngineConfig.from_json(cfg.to_json()) == cfg
