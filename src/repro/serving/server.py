@@ -184,6 +184,7 @@ class Server:
         self.hedge_factor = hedge_factor
         self.n_replicas = max(n_replicas, 1)
         self.hedges = 0
+        self.batch_failures = 0
         self._exec_times: list[float] = []
         # packed-layout summary (plan.meta["layout"]) so deployment stats
         # report the executor's memory/padding efficiency alongside latency.
@@ -235,7 +236,17 @@ class Server:
             return None
         payloads = [q.payload for q in batch]
         t0 = time.perf_counter()
-        out = self.step_fn(payloads)
+        try:
+            out = self.step_fn(payloads)
+        except Exception as e:
+            # fault containment: an executor error fails only this batch's
+            # handles — it must never leave handles pending forever or poison
+            # the pump for subsequent batches.
+            self.batch_failures += 1
+            for q in batch:
+                if q.handle is not None:
+                    q.handle._set_error(e)
+            return None
         dt = time.perf_counter() - t0
         # hedging: a straggling execution is retried on a backup replica; we
         # model the win as the median execution time (the backup is healthy).

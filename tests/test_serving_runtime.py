@@ -1,0 +1,46 @@
+"""Continuous-batching serving runtime robustness tests (DESIGN.md §8).
+
+The Server is model-agnostic, so these tests drive it with pure-python step
+functions: what matters here is the runtime's robustness semantics —
+admission control, deadlines, fault containment, degraded mode, and the
+request-accounting identity (served + shed + rejected + failed == submitted).
+"""
+import numpy as np
+import pytest
+
+from repro.serving.server import Server
+
+
+def _echo_step(payloads):
+    return [p for p in payloads]
+
+
+# ------------------------------------------------------------ fault containment
+
+
+def test_step_error_fails_only_its_batch_handles():
+    """Regression: an exception from step_fn used to propagate out of pump()
+    and leave every RequestHandle in the batch permanently pending."""
+    boom = {"on": True}
+
+    def step(payloads):
+        if boom["on"]:
+            raise RuntimeError("kernel crashed")
+        return [p for p in payloads]
+
+    srv = Server(step, max_batch=4, max_wait_s=0.0)
+    bad = [srv.submit_request(i) for i in range(4)]
+    out = srv.pump()  # must not raise
+    assert out is None
+    assert srv.batch_failures == 1
+    assert all(h.done() for h in bad), "failed batch left handles pending"
+    for h in bad:
+        with pytest.raises(Exception, match="kernel crashed"):
+            h.result()
+
+    # the pump is not poisoned: the next batch serves normally
+    boom["on"] = False
+    good = [srv.submit_request(i) for i in range(4)]
+    srv.pump()
+    assert all(h.done() for h in good)
+    assert [h.result() for h in good] == [0, 1, 2, 3]
