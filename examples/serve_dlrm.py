@@ -8,6 +8,12 @@ through a Future-style handle holding *that query's* logit; the engine's
 -> owner-sharded rejoin on an 8-device forced-host mesh).  The latency
 tracker reports the P99/throughput trade-off per placement plan — the
 CPU-scale analogue of the paper's Table I measurement loop.
+
+A second phase runs the same engine under a *bounded* admission queue with
+``shed-oldest`` + per-request deadlines (DESIGN.md §8): a burst larger than
+the queue is submitted without pumping, the stalest requests are shed with
+typed ``QueueFull``/``DeadlineExceeded`` errors, and the accounting
+identity served + shed + rejected == submitted is checked per run.
 """
 import os
 
@@ -86,7 +92,52 @@ def main():
         print(f"{planner:>10s}: p50={s['p50_us']:8.0f}us p99={s['p99_us']:8.0f}us "
               f"tps={s['tps']:8.0f} hedged={s['hedged_batches']} "
               f"logit[0]={logit0:+.3f}")
+
+    overload_demo(engine, wl, cfg, args)
     print("OK")
+
+
+def overload_demo(engine, wl, cfg, args):
+    """Overload the bounded queue: shed-oldest + deadlines keep the served
+    tail fresh and every submitted request is accounted for."""
+    from repro.serving.server import DeadlineExceeded, QueueFull, ServingError
+
+    srv = engine.serve(
+        max_batch=args.batch,
+        max_queue=2 * args.batch,  # bound the admission queue
+        admission="shed-oldest",
+        deadline_s=30.0,  # generous: only the queue bound sheds here
+    )
+    rng = np.random.default_rng(1)
+    b = ctr_batch(rng, wl, distribution=Zipf(1.05, hot_prefix=False),
+                  batch=args.batch)
+    # a 4x-overload burst submitted without a single pump: only the newest
+    # 2*batch survive in the queue, the rest are shed oldest-first
+    handles = [
+        srv.submit_request(
+            {"dense": b["dense"][q % args.batch],
+             "indices": b["indices"][:, q % args.batch]}
+        )
+        for q in range(4 * args.batch)
+    ]
+    unserved = srv.drain()
+    assert not unserved, f"{len(unserved)} queries left unserved"
+    assert all(h.wait(timeout=0.0) for h in handles)  # all resolved
+    outcomes = {"served": 0, "shed": 0}
+    for h in handles:
+        try:
+            h.result()
+            outcomes["served"] += 1
+        except (QueueFull, DeadlineExceeded):
+            outcomes["shed"] += 1
+        except ServingError:
+            raise  # batch failures would be a real bug here
+    s = srv.stats()
+    assert s["submitted"] == s["served"] + s["shed"] + s["rejected"] + s["failed"]
+    assert outcomes["served"] == s["served"] and outcomes["shed"] == s["shed"]
+    print(f"  overload: submitted={s['submitted']} served={s['served']} "
+          f"shed={s['shed']} (queue bound {srv.max_queue}, "
+          f"policy {srv.admission})")
 
 
 if __name__ == "__main__":

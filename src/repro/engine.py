@@ -282,9 +282,17 @@ class EngineConfig:
     hardware_options: dict = dataclasses.field(default_factory=dict)
     dtype: str = "float32"
     n_cores: int | None = None  # None = jax.device_count()
-    # serving
+    # serving (DESIGN.md §8): batching + admission control + deadlines +
+    # degraded-mode fault containment
     max_batch: int = 256
     max_wait_s: float = 0.0
+    max_queue: int | None = None  # None = unbounded admission queue
+    admission: str = "block"  # "block" | "reject" | "shed-oldest"
+    deadline_s: float | None = None  # default per-request deadline
+    adaptive_batching: bool = False  # arrival-rate-aware early release
+    degrade_after: int = 3  # consecutive batch failures before degraded
+    #   mode (0 disables the fallback path entirely)
+    probe_every: int = 4  # degraded-mode primary-probe cadence
 
     def validate(self) -> None:
         if self.layout not in ("ragged", "dense"):
@@ -302,6 +310,38 @@ class EngineConfig:
             )
         if self.dtype not in ("float32", "bfloat16", "float16"):
             raise ValueError(f"unknown dtype {self.dtype!r}")
+        if self.max_batch <= 0:
+            raise ValueError(f"max_batch must be positive, got {self.max_batch}")
+        if self.max_wait_s < 0:
+            raise ValueError(
+                f"max_wait_s must be >= 0, got {self.max_wait_s} "
+                "(0 releases as soon as anything is queued)"
+            )
+        from repro.serving.server import ADMISSION_POLICIES
+
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(
+                f"unknown admission policy {self.admission!r}; "
+                f"known: {list(ADMISSION_POLICIES)}"
+            )
+        if self.max_queue is not None and self.max_queue <= 0:
+            raise ValueError(
+                f"max_queue must be positive (or None for unbounded), "
+                f"got {self.max_queue}"
+            )
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be positive (or None), got {self.deadline_s}"
+            )
+        if self.degrade_after < 0:
+            raise ValueError(
+                f"degrade_after must be >= 0 (0 disables degraded mode), "
+                f"got {self.degrade_after}"
+            )
+        if self.probe_every <= 0:
+            raise ValueError(
+                f"probe_every must be positive, got {self.probe_every}"
+            )
         if self.access != "none":
             # same constraints the serve CLI enforced: the access-reduction
             # subsystem lives in the fused ragged executor and its knobs are
@@ -490,6 +530,28 @@ class InferenceEngine:
             cost_model=model,
         )
 
+    def reference_view(self) -> "InferenceEngine":
+        """A shallow engine view over the SAME bag/packed tables whose
+        executor knobs are forced to the XLA reference path
+        (``use_kernels="xla"``): the degraded-mode fallback the server
+        serves from when the fused path keeps crashing (DESIGN.md §8).
+        The reference path is parity-identical on any packed plan
+        (including dedup/cache-armed ones), so falling back never changes
+        results — only speed."""
+        import dataclasses as _dc
+
+        view = InferenceEngine(
+            config=_dc.replace(self.config, use_kernels="xla"),
+            workload=self.workload,
+            bag=self.bag,
+            packed=self.packed,
+            mesh=self.mesh,
+            freqs=self.freqs,
+            table_data=self._table_data,
+            cost_model=self.cost_model,
+        )
+        return view
+
     def rebuild(self, freqs) -> "InferenceEngine":
         """Same config + tables, re-planned/re-packed under new histograms —
         the shadow re-pack the drift policy runs off the hot path."""
@@ -566,6 +628,13 @@ class InferenceEngine:
         how a drift hot-swap rebuilds — the policy calls ``make_step`` again
         on the re-planned engine.  Default: the pooled embedding lookup,
         with per-query results split as (N, E) slices.
+
+        Robustness semantics come from the config: ``max_queue`` +
+        ``admission`` bound the queue, ``deadline_s`` shed stale requests,
+        and when ``degrade_after > 0`` and the primary executor is the
+        fused kernel path, a *fallback step* built from ``make_step`` over
+        :meth:`reference_view` (the XLA reference path on the same packed
+        tables) serves batches in degraded mode after repeated failures.
         """
         from repro.serving.server import Server
 
@@ -573,6 +642,16 @@ class InferenceEngine:
         step0 = maker(self)
         if getattr(step0, "bag", None) is None:
             step0.bag = self.bag
+
+        fallback = server_kwargs.pop("fallback_step_fn", None)
+        if (
+            fallback is None
+            and self.config.degrade_after > 0
+            and self.config.use_kernels == "fused"
+        ):
+            # built eagerly but jitted lazily: the reference step compiles
+            # only if a batch actually falls back to it.
+            fallback = maker(self.reference_view())
 
         def _replan(measured):
             shadow_engine = self.rebuild(measured)
@@ -598,8 +677,7 @@ class InferenceEngine:
             **self.config.drift_options,
         )
 
-        srv = Server(
-            step0,
+        kwargs = dict(
             max_batch=max_batch or self.config.max_batch,
             max_wait_s=(
                 max_wait_s if max_wait_s is not None else self.config.max_wait_s
@@ -612,8 +690,16 @@ class InferenceEngine:
             cache=dict(self.plan.meta.get("cache") or {}),
             drift=drift_cfg,
             split_fn=split_fn or self._default_split,
-            **server_kwargs,
+            max_queue=self.config.max_queue,
+            admission=self.config.admission,
+            deadline_s=self.config.deadline_s,
+            adaptive_batching=self.config.adaptive_batching,
+            fallback_step_fn=fallback,
+            degrade_after=self.config.degrade_after,
+            probe_every=self.config.probe_every,
         )
+        kwargs.update(server_kwargs)  # explicit kwargs override the config
+        srv = Server(step0, **kwargs)
         self._server = srv
         return srv
 

@@ -17,6 +17,14 @@ picks the query stream (``uniform`` / ``zipf:<a>`` /
 schedule spec (``flip`` = uniform -> zipf-1.2 -> hot-set-flip) routed
 through the request-level :class:`repro.serving.server.Server`.
 
+Serving robustness (DESIGN.md §8) is part of the config: ``--set
+max_queue=512 --set admission=shed-oldest --set deadline_s=0.05`` bounds
+the admission queue and sheds stale requests; ``--set degrade_after=3``
+arms the degraded-mode fallback (XLA reference path) against a crashing
+fused kernel.  The per-run report includes the request-accounting
+counters (submitted/served/shed/rejected/deadline_misses/batch_failures/
+degraded_batches).
+
 Legacy flag spellings (``--planner``, ``--layout``, ``--kernels``,
 ``--reduce``, ``--autotune``, ``--dedup``, ``--cache``, ``--replan``,
 ``--replan-threshold``) still work: each maps onto the corresponding
@@ -292,10 +300,24 @@ def main(argv=None):
             ]
             srv.pump()
             assert handles[0].done()
-        srv.drain()
+        unserved = srv.drain()
+        if unserved:
+            print(f"[serve] WARNING: {len(unserved)} queries left unserved")
         s = srv.stats()
         print(f"[serve] dist={label:8s} p50={s['p50_us']:9.0f}us "
               f"p99={s['p99_us']:9.0f}us tps={s['tps']:9.0f}")
+        _print_robustness(s)
+
+
+def _print_robustness(s: dict) -> None:
+    """One accounting line whenever the run saw any robustness event."""
+    if any(s.get(k) for k in ("rejected", "shed", "deadline_misses",
+                              "batch_failures", "degraded_batches")):
+        print(f"[serve]   submitted={s['submitted']} served={s['served']} "
+              f"shed={s['shed']} rejected={s['rejected']} "
+              f"deadline_misses={s['deadline_misses']} "
+              f"batch_failures={s['batch_failures']} "
+              f"degraded_batches={s['degraded_batches']}")
 
 
 def _serve_drift(args, wl, schedule, engine, make_step, split, *, n_dense):
@@ -313,7 +335,9 @@ def _serve_drift(args, wl, schedule, engine, make_step, split, *, n_dense):
         for q in range(batch):
             srv.submit({"dense": dense[q], "indices": idx[:, q]})
         srv.pump()
-    srv.drain()
+    unserved = srv.drain()
+    if unserved:
+        print(f"[serve] WARNING: {len(unserved)} queries left unserved")
     s = srv.stats()
     line = (f"[serve] drift p50={s['p50_us']:9.0f}us p99={s['p99_us']:9.0f}us "
             f"tps={s['tps']:9.0f}")
@@ -322,6 +346,7 @@ def _serve_drift(args, wl, schedule, engine, make_step, split, *, n_dense):
         line += (f" replans={r['replans']} parity_failures="
                  f"{r['parity_failures']} last_drift={r['last_drift']:.3f}")
     print(line)
+    _print_robustness(s)
     for ev in s.get("replan", {}).get("events", []):
         print(f"[serve]   replan@batch={ev['batch']} drift={ev['drift']:.3f} "
               f"parity_ok={ev['parity_ok']}")

@@ -1,8 +1,13 @@
-"""Latency percentile tracking for SLA-driven serving (paper §IV-A).
+"""Latency percentile + queue-depth tracking for SLA-driven serving.
 
-The paper's deployment metric is the P99 batch latency under an SLA bound;
-this tracker maintains a sliding window of per-batch latencies and exposes
-the percentile/throughput trade-off the evaluation plots."""
+The paper's deployment metric is the P99 batch latency under an SLA bound
+(§IV-A); this tracker maintains a sliding window of per-batch latencies and
+exposes the percentile/throughput trade-off the evaluation plots.  The
+serving runtime (DESIGN.md §8) additionally records the admission-queue
+depth observed at each batch release: under overload, a no-admission
+configuration's latency grows linearly with this depth, which is exactly
+the signal the bounded-queue policies are there to cap — ``servebench``
+plots both columns side by side."""
 from __future__ import annotations
 
 import collections
@@ -13,6 +18,7 @@ import numpy as np
 class LatencyTracker:
     def __init__(self, window: int = 2048):
         self.samples: collections.deque[float] = collections.deque(maxlen=window)
+        self.depths: collections.deque[int] = collections.deque(maxlen=window)
         self.queries = 0
         self.t_total = 0.0
 
@@ -20,6 +26,10 @@ class LatencyTracker:
         self.samples.append(seconds)
         self.queries += queries
         self.t_total += seconds
+
+    def record_depth(self, depth: int) -> None:
+        """Admission-queue depth at a batch release (post-release)."""
+        self.depths.append(int(depth))
 
     def percentile(self, q: float) -> float:
         if not self.samples:
@@ -39,9 +49,14 @@ class LatencyTracker:
         return self.queries / self.t_total if self.t_total else 0.0
 
     def summary(self) -> dict:
-        return {
+        out = {
             "p50_us": self.p50 * 1e6,
             "p99_us": self.p99 * 1e6,
             "tps": self.throughput,
             "n": len(self.samples),
         }
+        if self.depths:
+            depths = np.array(self.depths)
+            out["queue_depth_mean"] = float(depths.mean())
+            out["queue_depth_max"] = int(depths.max())
+        return out
