@@ -2,22 +2,27 @@
 #
 #   make test         — the repo's tier-1 pytest suite
 #   make bench-check  — regenerate the layout bench + the drift/dedup
-#                       benches (fast smoke mode) and diff them against the
-#                       committed BENCH_embedding_layout.json /
-#                       BENCH_drift.json / BENCH_dedup.json (>20%
+#                       benches (fast smoke mode) + the serving robustness
+#                       sweep and diff them against the committed
+#                       BENCH_embedding_layout.json / BENCH_drift.json /
+#                       BENCH_dedup.json / BENCH_serving.json (>20%
 #                       bytes/modeled regression, a collapsed dedup
-#                       reduction factor, or a flipped invariant, fails)
+#                       reduction factor, a serving-tail/goodput
+#                       regression, or a flipped invariant, fails)
 #   make tier1        — both
 #   make bench        — regenerate BENCH_embedding_layout.json in place
 #   make driftbench   — full drift scenario matrix (modeled + served loop),
 #                       regenerating BENCH_drift.json in place
 #   make dedupbench   — full access-reduction matrix (modeled + parity +
 #                       interpret wall), regenerating BENCH_dedup.json
+#   make servebench   — offered-load sweep on the simulated clock
+#                       (admission control vs unbounded baseline),
+#                       regenerating BENCH_serving.json in place
 
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-check bench driftbench dedupbench tier1
+.PHONY: test bench-check bench driftbench dedupbench servebench tier1
 
 test:
 	$(PY) -m pytest -x -q
@@ -34,5 +39,8 @@ driftbench:
 
 dedupbench:
 	$(PY) benchmarks/dedupbench.py
+
+servebench:
+	$(PY) benchmarks/servebench.py
 
 tier1: test bench-check

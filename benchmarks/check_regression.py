@@ -41,6 +41,16 @@ the tolerance on any gated metric.  Two baselines are gated (see
   inflated, fused dedup/cache parity.  Interpret walls are never gated.
   The dedup candidate regenerates in fast smoke mode (``--no-measure``).
 
+``BENCH_serving.json`` (servebench offered-load sweep), when committed:
+
+* **served p99 / shed rate** for the admission-controlled config per load
+  level — deterministic (simulated clock), gated at ``--bytes-tol``;
+* **goodput** for the admission-controlled config — direction-flipped
+  gate (a shrink beyond tolerance fails);
+* **invariants** — accounting identity, shed p99 bounded at 2x overload,
+  baseline degrades, goodput holds near capacity.  The candidate is
+  regenerated in full (the simulation is wall-clock-free and runs in ~1 s).
+
 Wired into ``make bench-check`` (the tier-1 flow's companion target).
 """
 from __future__ import annotations
@@ -55,6 +65,7 @@ _REPO_ROOT = Path(__file__).resolve().parent.parent
 _BASELINE = _REPO_ROOT / "BENCH_embedding_layout.json"
 _DRIFT_BASELINE = _REPO_ROOT / "BENCH_drift.json"
 _DEDUP_BASELINE = _REPO_ROOT / "BENCH_dedup.json"
+_SERVING_BASELINE = _REPO_ROOT / "BENCH_serving.json"
 
 _BYTES_KEYS = ("chunk_bytes",)
 _TRAFFIC_PATHS = ("fused", "xla_gather")
@@ -220,6 +231,58 @@ def compare_dedup(
     return failures
 
 
+def _serving_metrics(record: dict) -> dict[str, float]:
+    """servebench record -> gated deterministic columns for the
+    admission-controlled ("shed") config: served p99 + shed rate per load
+    level (regressions = increases) and goodput (direction-flipped: a
+    shrink is the regression — see compare_serving).  The unbounded
+    baseline's overload p99 is intentionally ungated: it measures the
+    failure mode, not the product."""
+    out: dict[str, float] = {}
+    for l in record.get("loads", []):
+        x = l.get("offered_x")
+        shed = l.get("shed", {})
+        for k in ("p99_ms", "shed_rate", "goodput_qps"):
+            if k in shed:
+                out[f"serving.{x}x.shed.{k}"] = float(shed[k])
+    v = record.get("p99_degrade", {}).get("shed")
+    if v is not None:
+        out["serving.degrade.shed_p99"] = float(v)
+    return out
+
+
+def compare_serving(
+    baseline: dict, candidate: dict, *, tol: float = 0.20
+) -> list[str]:
+    """Serving-bench gate: served-tail/shed-rate regressions, goodput
+    collapses, and invariant flips."""
+    failures: list[str] = []
+    base, cand = _serving_metrics(baseline), _serving_metrics(candidate)
+    for name, b in sorted(base.items()):
+        c = cand.get(name)
+        if c is None:
+            failures.append(f"{name}: missing from candidate (was {b:.2f})")
+            continue
+        shrinking_is_bad = name.endswith("goodput_qps")
+        if shrinking_is_bad:
+            if b > 0 and c < b * (1.0 - tol):
+                failures.append(
+                    f"{name}: {c:.0f} vs baseline {b:.0f} "
+                    f"({(c / b - 1) * 100:.1f}% < -{tol * 100:.0f}% tol)"
+                )
+        elif b > 0 and c > b * (1.0 + tol):
+            failures.append(
+                f"{name}: {c:.2f} vs baseline {b:.2f} "
+                f"(+{(c / b - 1) * 100:.1f}% > {tol * 100:.0f}% tol)"
+            )
+    for k, v in baseline.get("invariants", {}).items():
+        if v and not candidate.get("invariants", {}).get(k, False):
+            failures.append(
+                f"serving invariant {k!r}: true in baseline, now false"
+            )
+    return failures
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--baseline", type=Path, default=_BASELINE)
@@ -246,6 +309,14 @@ def main(argv=None) -> int:
     )
     p.add_argument("--skip-dedup", action="store_true",
                    help="skip the access-reduction bench gate")
+    p.add_argument("--baseline-serving", type=Path, default=_SERVING_BASELINE)
+    p.add_argument(
+        "--candidate-serving", type=Path, default=None,
+        help="serving bench JSON to check; omitted = regenerate (the "
+             "simulated-clock sweep is deterministic and CPU-quick)",
+    )
+    p.add_argument("--skip-serving", action="store_true",
+                   help="skip the serving robustness bench gate")
     args = p.parse_args(argv)
 
     baseline = json.loads(args.baseline.read_text())
@@ -305,6 +376,28 @@ def main(argv=None) -> int:
             if name in kc and kb[name] > 0:
                 delta = (kc[name] / kb[name] - 1) * 100
                 print(f"[bench-check] {name}: {kc[name]:.2f} ({delta:+.1f}%)")
+
+    if not args.skip_serving and args.baseline_serving.exists():
+        serving_base = json.loads(args.baseline_serving.read_text())
+        if args.candidate_serving is not None:
+            serving_cand = json.loads(args.candidate_serving.read_text())
+        else:
+            sys.path.insert(0, str(_REPO_ROOT))
+            from benchmarks.servebench import run as serving_run
+
+            tmp = Path(tempfile.mkstemp(suffix=".json")[1])
+            serving_cand = serving_run(csv=False, out_path=tmp)
+            print(f"[bench-check] regenerated serving candidate -> {tmp}")
+        failures += compare_serving(
+            serving_base, serving_cand, tol=args.bytes_tol
+        )
+        sb, sc = (
+            _serving_metrics(serving_base), _serving_metrics(serving_cand)
+        )
+        for name in sorted(sb):
+            if name in sc and sb[name] > 0:
+                delta = (sc[name] / sb[name] - 1) * 100
+                print(f"[bench-check] {name}: {sc[name]:.2f} ({delta:+.1f}%)")
 
     if failures:
         print(f"[bench-check] FAIL — {len(failures)} regression(s):")

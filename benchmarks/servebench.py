@@ -1,0 +1,241 @@
+"""Serving robustness benchmark: offered-load sweep under admission control.
+
+    PYTHONPATH=src python benchmarks/servebench.py          # regenerate JSON
+    PYTHONPATH=src python benchmarks/servebench.py --out x.json
+
+Drives the continuous-batching ``Server`` (DESIGN.md §8) through a
+discrete-event simulation on its injectable clock — no wall time, no jit:
+every number in ``BENCH_serving.json`` is a deterministic function of the
+seed, so the whole record is regression-gateable at tight tolerance.
+
+The simulated device executes a batch of ``n`` queries in
+``SERVICE_FIXED_S + n * SERVICE_PER_QUERY_S`` (the classic fixed-overhead +
+per-row cost shape of the paper's batch-latency model, Fig. 4), which pins
+the server's capacity in queries/s.  Poisson arrivals are swept across
+offered loads {0.5, 1, 2, 4}x capacity, and each load level runs two
+configurations:
+
+* **baseline** — unbounded admission queue, no deadlines: the pre-§8
+  runtime.  Under overload the backlog (and therefore the latency of every
+  subsequent request) grows linearly with time served — the p99 column is
+  only bounded by the length of the simulation;
+* **shed** — ``max_queue = 2 * max_batch`` + ``shed-oldest`` + a
+  per-request deadline: excess traffic is shed at admission (typed
+  ``QueueFull``) or at release (``DeadlineExceeded``), so the *served*
+  tail stays within a small multiple of the uncontended tail while goodput
+  holds near capacity.
+
+The ``invariants`` block records the robustness claims —
+
+* the request accounting identity ``submitted == served + shed + rejected
+  + failed`` holds for every run,
+* at 2x overload the shed config's served p99 stays <= ``SHED_P99_BOUND``
+  x its own uncontended (0.5x) p99,
+* the baseline's p99 at 2x degrades by >= ``BASELINE_DEGRADE_MIN`` x
+  (the unbounded-queue failure mode the admission layer exists to cap),
+* the shed config's goodput at 2x stays >= ``GOODPUT_FLOOR`` x capacity —
+
+and ``benchmarks/check_regression.py`` gates them (plus the shed config's
+p99/goodput columns) against the committed ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# allow running as a script or importing as benchmarks.servebench
+import sys
+
+sys.path.insert(0, str(_REPO_ROOT / "src"))
+
+from repro.serving.server import Server  # noqa: E402
+
+# simulated device: batch service time = fixed + per-query (seconds)
+SERVICE_FIXED_S = 1e-3
+SERVICE_PER_QUERY_S = 5e-5
+MAX_BATCH = 32
+MAX_WAIT_S = 2e-3
+MAX_QUEUE = 2 * MAX_BATCH
+DEADLINE_S = 15e-3
+OFFERED_LOADS = (0.5, 1.0, 2.0, 4.0)
+N_ARRIVALS = 4096
+
+# invariant thresholds (see module docstring)
+SHED_P99_BOUND = 2.0
+BASELINE_DEGRADE_MIN = 5.0
+GOODPUT_FLOOR = 0.8
+
+
+class SimClock:
+    """Injectable simulated clock: the step_fn advances it by the batch's
+    service time, the arrival loop advances it to each arrival."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+
+def service_s(n: int) -> float:
+    return SERVICE_FIXED_S + n * SERVICE_PER_QUERY_S
+
+
+def capacity_qps() -> float:
+    """Steady-state ceiling: full batches back to back."""
+    return MAX_BATCH / service_s(MAX_BATCH)
+
+
+def simulate(offered_x: float, *, bounded: bool, seed: int = 0) -> dict:
+    """One (offered load, config) run; returns the gated metric row."""
+    clock = SimClock()
+
+    def step(payloads):
+        clock.t += service_s(len(payloads))
+        return list(payloads)
+
+    kwargs: dict = dict(max_batch=MAX_BATCH, max_wait_s=MAX_WAIT_S,
+                        clock=clock.now)
+    if bounded:
+        kwargs.update(max_queue=MAX_QUEUE, admission="shed-oldest",
+                      deadline_s=DEADLINE_S)
+    srv = Server(step, **kwargs)
+
+    rate = offered_x * capacity_qps()
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, N_ARRIVALS))
+    # discrete-event loop: the single pump thread is busy while a batch
+    # executes, so every arrival that occurred by "now" is admitted before
+    # the next release decision — that's what lets batches actually fill
+    # (continuous batching), instead of degenerating to batch-of-1 serving.
+    i, n = 0, len(arrivals)
+    while i < n or srv.batcher.queue:
+        while i < n and arrivals[i] <= clock.t:
+            srv.submit_request(None, now=float(arrivals[i]))
+            i += 1
+        q = srv.batcher.queue
+        if q and (
+            len(q) >= MAX_BATCH or clock.t - q[0].t_enqueue >= MAX_WAIT_S
+        ):
+            srv.pump()  # executes; step advances the clock by service time
+            continue
+        # idle: jump to the next event (arrival or wait-timer expiry)
+        events = [q[0].t_enqueue + MAX_WAIT_S] if q else []
+        if i < n:
+            events.append(float(arrivals[i]))
+        if not events:
+            break
+        prev = clock.t
+        clock.t = max(clock.t, min(events))
+        if clock.t == prev:
+            # float round-off can land (t_enqueue + max_wait) exactly on the
+            # clock while (clock - t_enqueue) still compares < max_wait;
+            # force one release so the loop always makes progress.
+            srv.pump(force=True)
+    srv.drain()
+
+    s = srv.stats()
+    makespan = clock.t - float(arrivals[0])
+    accounted = s["submitted"] == (
+        s["served"] + s["shed"] + s["rejected"] + s["failed"] + s["pending"]
+    )
+    return {
+        "offered_x": offered_x,
+        "offered_qps": rate,
+        "submitted": s["submitted"],
+        "served": s["served"],
+        "shed": s["shed"],
+        "deadline_misses": s["deadline_misses"],
+        "rejected": s["rejected"],
+        "failed": s["failed"],
+        "shed_rate": s["shed"] / max(s["submitted"], 1),
+        "goodput_qps": s["served"] / makespan,
+        "p50_ms": s["p50_us"] / 1e3,
+        "p99_ms": s["p99_us"] / 1e3,
+        "queue_depth_max": s.get("queue_depth_max", 0),
+        "accounted": bool(accounted),
+    }
+
+
+def run(csv: bool = True, out_path: Path | None = None, seed: int = 0) -> dict:
+    loads = []
+    for x in OFFERED_LOADS:
+        loads.append(
+            {
+                "offered_x": x,
+                "baseline": simulate(x, bounded=False, seed=seed),
+                "shed": simulate(x, bounded=True, seed=seed),
+            }
+        )
+
+    def row(x: float, mode: str) -> dict:
+        return next(l for l in loads if l["offered_x"] == x)[mode]
+
+    cap = capacity_qps()
+    shed_ratio = row(2.0, "shed")["p99_ms"] / row(0.5, "shed")["p99_ms"]
+    base_ratio = row(2.0, "baseline")["p99_ms"] / row(0.5, "baseline")["p99_ms"]
+    invariants = {
+        "accounting_identity": all(
+            l[m]["accounted"] for l in loads for m in ("baseline", "shed")
+        ),
+        "shed_p99_bounded": shed_ratio <= SHED_P99_BOUND,
+        "baseline_p99_degrades": base_ratio >= BASELINE_DEGRADE_MIN,
+        "shed_goodput_near_capacity": (
+            row(2.0, "shed")["goodput_qps"] >= GOODPUT_FLOOR * cap
+        ),
+    }
+    record = {
+        "max_batch": MAX_BATCH,
+        "max_wait_ms": MAX_WAIT_S * 1e3,
+        "max_queue": MAX_QUEUE,
+        "deadline_ms": DEADLINE_S * 1e3,
+        "service_fixed_ms": SERVICE_FIXED_S * 1e3,
+        "service_per_query_us": SERVICE_PER_QUERY_S * 1e6,
+        "capacity_qps": cap,
+        "n_arrivals": N_ARRIVALS,
+        "seed": seed,
+        "loads": loads,
+        "p99_degrade": {"shed": shed_ratio, "baseline": base_ratio},
+        "shed_p99_bound": SHED_P99_BOUND,
+        "baseline_degrade_min": BASELINE_DEGRADE_MIN,
+        "goodput_floor": GOODPUT_FLOOR,
+        "invariants": invariants,
+    }
+    if csv:
+        for l in loads:
+            for mode in ("baseline", "shed"):
+                r = l[mode]
+                print(
+                    f"servebench,{l['offered_x']:.1f}x,{mode},"
+                    f"p50={r['p50_ms']:.2f}ms,p99={r['p99_ms']:.2f}ms,"
+                    f"goodput={r['goodput_qps']:.0f}qps,"
+                    f"shed_rate={r['shed_rate']:.3f},"
+                    f"depth_max={r['queue_depth_max']}"
+                )
+        print(
+            f"servebench,degrade,shed_p99={shed_ratio:.2f}x,"
+            f"baseline_p99={base_ratio:.2f}x,capacity={cap:.0f}qps"
+        )
+        print(f"servebench,invariants,{invariants}")
+    out_path = out_path or _REPO_ROOT / "BENCH_serving.json"
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--out", type=Path, default=None)
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+    record = run(out_path=args.out, seed=args.seed)
+    if not all(record["invariants"].values()):
+        raise SystemExit(f"servebench invariants failed: {record['invariants']}")
+
+
+if __name__ == "__main__":
+    main()

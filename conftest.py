@@ -1,0 +1,17 @@
+"""Root conftest: keep pytest.ini's ``timeout`` key valid without
+pytest-timeout.
+
+CI installs pytest-timeout and enforces the per-test hang guard; local
+environments may not have it (the repo adds no hard dependencies beyond
+jax/numpy/pytest).  Only an initial (rootdir) conftest may add options, so
+the fallback registration lives here rather than in tests/conftest.py."""
+
+
+def pytest_addoption(parser, pluginmanager):
+    if not pluginmanager.hasplugin("timeout"):
+        parser.addini(
+            "timeout",
+            "per-test timeout in seconds (inert fallback: install "
+            "pytest-timeout to enforce it)",
+            default=None,
+        )
