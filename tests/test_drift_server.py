@@ -222,3 +222,241 @@ def test_hot_swap_e2e_packed_plans():
     # the swapped-in plan is frequency-aware and differs from the original
     assert srv.step_fn.bag.plan.meta["planner"].endswith("+freq")
     assert srv.step_fn.bag.plan.meta["distribution"] is not None
+
+
+# ------------------------------------------------- trigger edge cases (§5)
+
+
+def _scripted_distance(srv, script):
+    """Replace the sketch-derived drift metric with a scripted sequence so
+    each check's over/under-threshold outcome is exact."""
+    it = iter(script)
+    srv._distance = lambda measured: next(it)
+
+
+def test_strikes_reset_on_under_threshold_check():
+    """Hysteresis is consecutive: over, under, over, over with patience=2
+    replans on check 4 — the under-threshold check wiped the first strike."""
+    rng = np.random.default_rng(10)
+    tables = _tables(rng)
+    srv = Server(
+        _ref_step(tables, tag="original"),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, check_every=1, patience=2),
+    )
+    _scripted_distance(srv, [0.9, 0.0, 0.9, 0.9, 0.0, 0.0])
+    _drive(srv, rng, Uniform(), 2)
+    assert srv.replans == 0, "a wiped strike still counted toward patience"
+    assert srv.step_fn.tag == "original"
+    _drive(srv, rng, Uniform(), 2)
+    assert srv.replans == 1
+    assert srv.replan_events[0]["batch"] == 4
+    assert srv.step_fn.tag == "replanned"
+
+
+def test_check_every_one_checks_every_batch():
+    rng = np.random.default_rng(11)
+    tables = _tables(rng)
+    srv = Server(
+        _ref_step(tables),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, check_every=1, patience=1, cooldown=1000),
+    )
+    _scripted_distance(srv, [0.0, 0.0, 0.0, 0.9])
+    _drive(srv, rng, Uniform(), 3)
+    assert srv.drift_checks == 3
+    assert srv.replans == 0
+    # patience=1: the first over-threshold check replans immediately
+    _drive(srv, rng, Uniform(), 1)
+    assert srv.replans == 1 and srv.replan_events[0]["batch"] == 4
+
+
+def test_strikes_survive_nothing_across_cooldown():
+    """After a swap the cooldown rests the trigger; once it expires a replan
+    needs `patience` FRESH consecutive strikes (none carried over)."""
+    rng = np.random.default_rng(12)
+    tables = _tables(rng)
+    srv = Server(
+        _ref_step(tables, tag="original"),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, check_every=1, patience=2, cooldown=3),
+    )
+    # swap once at batch 2 (checks 1, 2 over threshold)
+    script = [0.9] * 2 + [0.9, 0.9, 0.9, 0.0]
+    _scripted_distance(srv, script)
+    _drive(srv, rng, Uniform(), 2)
+    assert srv.replans == 1
+    # batches 3-4 rest (cooldown=3 from batch 2); checks resume at batch 5
+    # with 0.9, 0.9 -> the second replan lands at batch 6, not earlier
+    _scripted_distance(srv, [0.9, 0.9, 0.0, 0.0])
+    _drive(srv, rng, Uniform(), 5)
+    assert srv.replans == 2
+    assert srv.replan_events[1]["batch"] == 6
+
+
+def test_extract_indices_fewer_tables_than_baseline():
+    """A sketch feed covering only a prefix of the tables (e.g. the payload
+    carries just the big table's indices) still drives the trigger; the
+    unfed tables' sketches read as uniform and contribute zero drift."""
+    rng = np.random.default_rng(13)
+    tables = _tables(rng)
+    srv = Server(
+        _ref_step(tables, tag="original"),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(
+            tables,
+            extract_indices=lambda payloads: _extract(payloads)[:1],
+        ),
+    )
+    _drive(srv, rng, HotSet(0.005, 0.95), 16)
+    assert srv.replans >= 1, "prefix-only sketch feed never triggered"
+    assert srv.step_fn.tag == "replanned"
+    assert srv.parity_failures == 0
+
+
+def test_parity_failure_then_successful_swap():
+    """A rejected shadow plan doesn't wedge the trigger: after the cooldown
+    the next attempt builds a correct plan and the swap lands."""
+    rng = np.random.default_rng(14)
+    tables = _tables(rng)
+    attempts = []
+
+    def flaky_replan(measured):
+        attempts.append(len(attempts))
+        good = _ref_step(tables, tag="replanned")
+        if len(attempts) == 1:  # first shadow build is wrong
+            return lambda payloads: good(payloads) + 1.0
+        return good
+
+    srv = Server(
+        _ref_step(tables, tag="original"),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, replan=flaky_replan, cooldown=2),
+    )
+    _drive(srv, rng, HotSet(0.005, 0.95), 24)
+    assert len(attempts) >= 2
+    assert srv.parity_failures == 1  # only the first build was wrong
+    assert srv.replans >= 1
+    assert srv.step_fn.tag == "replanned"
+    events = srv.replan_events
+    assert not events[0]["parity_ok"] and events[1]["parity_ok"]
+
+
+def test_replan_exception_is_contained():
+    """A crashing shadow re-pack is counted, recorded, and does not take
+    serving down or swap anything in."""
+    rng = np.random.default_rng(15)
+    tables = _tables(rng)
+
+    def exploding_replan(measured):
+        raise RuntimeError("packer OOM")
+
+    srv = Server(
+        _ref_step(tables, tag="original"),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, replan=exploding_replan, cooldown=2),
+    )
+    _drive(srv, rng, HotSet(0.005, 0.95), 16)
+    assert srv.replan_errors >= 1
+    assert srv.replans == 0
+    assert srv.step_fn.tag == "original"
+    assert any("packer OOM" in ev.get("error", "") for ev in srv.replan_events)
+    assert srv.stats()["replan"]["replan_errors"] == srv.replan_errors
+    # serving never stopped: every query in every batch got served
+    assert srv.served == srv.submitted
+
+
+# --------------------------------------------------- overlapped replans (§8)
+
+
+def test_overlap_replan_serves_while_shadow_builds():
+    """overlap=True: the pump keeps serving on the old plan while the
+    shadow builds on the worker thread; the swap lands on the first batch
+    after the build completes."""
+    import threading
+
+    rng = np.random.default_rng(16)
+    tables = _tables(rng)
+    gate = threading.Event()
+    started = threading.Event()
+
+    def slow_replan(measured):
+        started.set()
+        assert gate.wait(timeout=30.0), "test gate never opened"
+        return _ref_step(tables, tag="replanned")
+
+    srv = Server(
+        _ref_step(tables, tag="original"),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, replan=slow_replan, overlap=True),
+    )
+    _drive(srv, rng, HotSet(0.005, 0.95), 8)
+    assert started.wait(timeout=30.0), "drift never triggered a shadow build"
+    # build in flight: serving continues on the old plan, no swap yet
+    served_before = srv.served
+    _drive(srv, rng, HotSet(0.005, 0.95), 3)
+    assert srv.served == served_before + 3 * WL.batch
+    assert srv.step_fn.tag == "original" and srv.replans == 0
+    gate.set()
+    srv._shadow_build.join(timeout=30.0)
+    _drive(srv, rng, HotSet(0.005, 0.95), 1)  # completion batch: parity+swap
+    assert srv.replans == 1
+    assert srv.step_fn.tag == "replanned"
+    assert srv.parity_failures == 0
+
+
+def test_drain_joins_inflight_shadow_build():
+    """Traffic ends while the shadow is still building: drain() joins the
+    thread and runs the parity probe on the last served batch, so the swap
+    isn't lost."""
+    import threading
+
+    rng = np.random.default_rng(17)
+    tables = _tables(rng)
+    gate = threading.Event()
+
+    def slow_replan(measured):
+        assert gate.wait(timeout=30.0), "test gate never opened"
+        return _ref_step(tables, tag="replanned")
+
+    srv = Server(
+        _ref_step(tables, tag="original"),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, replan=slow_replan, overlap=True),
+    )
+    _drive(srv, rng, HotSet(0.005, 0.95), 8)
+    assert srv.replans == 0 and srv._shadow_build is not None
+    gate.set()
+    assert srv.drain() == []
+    assert srv.replans == 1
+    assert srv.step_fn.tag == "replanned"
+
+
+def test_overlap_replan_error_is_contained():
+    rng = np.random.default_rng(18)
+    tables = _tables(rng)
+
+    def exploding_replan(measured):
+        raise RuntimeError("shadow thread crash")
+
+    srv = Server(
+        _ref_step(tables, tag="original"),
+        max_batch=WL.batch,
+        max_wait_s=0.0,
+        drift=_config(tables, replan=exploding_replan, overlap=True,
+                      cooldown=2),
+    )
+    _drive(srv, rng, HotSet(0.005, 0.95), 16)
+    srv.drain()
+    assert srv.replan_errors >= 1
+    assert srv.replans == 0
+    assert srv.step_fn.tag == "original"
+    assert srv.served == srv.submitted
