@@ -3,11 +3,13 @@
 #   make test         — the repo's tier-1 pytest suite
 #   make bench-check  — regenerate the layout bench + the drift/dedup
 #                       benches (fast smoke mode) + the serving robustness
-#                       sweep and diff them against the committed
+#                       sweep + the chaos fault-containment matrix and diff
+#                       them against the committed
 #                       BENCH_embedding_layout.json / BENCH_drift.json /
-#                       BENCH_dedup.json / BENCH_serving.json (>20%
-#                       bytes/modeled regression, a collapsed dedup
-#                       reduction factor, a serving-tail/goodput
+#                       BENCH_dedup.json / BENCH_serving.json /
+#                       BENCH_chaos.json (>20% bytes/modeled regression, a
+#                       collapsed dedup reduction factor, a serving-tail/
+#                       goodput regression, a containment/blast-radius
 #                       regression, or a flipped invariant, fails)
 #   make tier1        — both
 #   make bench        — regenerate BENCH_embedding_layout.json in place
@@ -18,11 +20,13 @@
 #   make servebench   — offered-load sweep on the simulated clock
 #                       (admission control vs unbounded baseline),
 #                       regenerating BENCH_serving.json in place
+#   make chaosbench   — seeded fault-injection matrix (fault class x
+#                       validation policy), regenerating BENCH_chaos.json
 
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-check bench driftbench dedupbench servebench tier1
+.PHONY: test bench-check bench driftbench dedupbench servebench chaosbench tier1
 
 test:
 	$(PY) -m pytest -x -q
@@ -42,5 +46,8 @@ dedupbench:
 
 servebench:
 	$(PY) benchmarks/servebench.py
+
+chaosbench:
+	$(PY) benchmarks/chaosbench.py
 
 tier1: test bench-check

@@ -1,0 +1,293 @@
+"""Chaos benchmark: fault-type x validation-policy containment matrix.
+
+    PYTHONPATH=src python benchmarks/chaosbench.py          # regenerate JSON
+    PYTHONPATH=src python benchmarks/chaosbench.py --out x.json
+
+Drives the full data-plane integrity stack (DESIGN.md §9) with the seeded
+fault injector (``repro.serving.faults``): every cell builds a real engine
+on the small smoke workload (XLA path, CPU-fast), serves ``N_BATCHES``
+batches of zipf traffic through the continuous-batching ``Server``, and
+injects exactly one scheduled fault class:
+
+* ``none``         — control: no fault, zero failures, clean checksums;
+* ``step_crash``   — ``InjectedFault`` inside the primary step: PR-6
+  containment must fail only that batch's handles;
+* ``bit_flip``     — a silent bit flip in a hot row of the live packed
+  buffer (the step is rebuilt onto the corrupted constants without telling
+  the server): the checksum cadence must detect, heal via the shadow-repack
+  path, and leave the manifest clean;
+* ``nan_rows``     — NaN-poisoned hot rows: the NaN output guard fails the
+  poisoned batch (typed ``PoisonedOutputError``) and triggers an immediate
+  integrity sweep + heal;
+* ``stuck_replan`` — a drift-triggered shadow build parked on an
+  injector-held event: ``build_timeout_batches`` must abandon it so the
+  server can replan again instead of pinning to a stale plan;
+* ``oov_burst``    — a poisoned query burst (out-of-vocab ids), run under
+  each validation policy: ``clip`` counts and serves, ``null-row`` counts
+  and zeroes, ``reject`` fails only the offending requests' handles.
+
+Per cell the gated columns are **detected** (the fault class's detection
+signal fired), **contained** (blast radius ``failed + invalid`` <= one
+batch), **accounted** (``submitted == served + shed + rejected + failed +
+invalid + pending``), **healed** (buffer faults: a repair ran, zero heal
+failures, final checksums clean) and **recovery_batches** (batches between
+injection and the detecting sweep, <= ``RECOVERY_BUDGET``).  A separate
+``clip_parity`` invariant replays identical traffic (including a poisoned
+burst) through a ``validation="clip"`` server and a no-validator server and
+requires bitwise-equal outputs — clip is today's behavior made observable,
+not a new numeric path.  Everything is a deterministic function of the
+seeds; ``benchmarks/check_regression.py`` gates the record against the
+committed ``BENCH_chaos.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import numpy as np
+
+_REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# allow running as a script or importing as benchmarks.chaosbench
+import sys
+
+sys.path.insert(0, str(_REPO_ROOT / "src"))
+
+from repro.data.distributions import Zipf, sample_workload  # noqa: E402
+from repro.data.workloads import small_workload  # noqa: E402
+from repro.serving.faults import (  # noqa: E402
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    arm_buffer_corruption,
+)
+
+N_BATCHES = 24
+BATCH = 16
+INJECT_AT = 8          # fault specs arm at this served-batch index
+CHECK_EVERY = 4        # integrity sweep cadence (batches)
+RECOVERY_BUDGET = 6    # max batches between injection and detection
+SEED = 0
+
+# (cell name, validation mode, fault specs) — one scheduled fault per cell
+CELLS = [
+    ("none", "clip", []),
+    ("step_crash", "clip",
+     [FaultSpec("step", at_batch=INJECT_AT, mode="crash")]),
+    ("bit_flip", "clip",
+     [FaultSpec("buffer", at_batch=INJECT_AT, mode="bitflip", count=4)]),
+    ("nan_rows", "clip",
+     [FaultSpec("buffer", at_batch=INJECT_AT, mode="nan-rows", count=2)]),
+    ("stuck_replan", "clip",
+     [FaultSpec("replan", at_batch=0, mode="stall")]),
+    ("oov_burst", "clip",
+     [FaultSpec("query", at_batch=INJECT_AT, mode="oov", count=8)]),
+    ("oov_burst", "null-row",
+     [FaultSpec("query", at_batch=INJECT_AT, mode="oov", count=8)]),
+    ("oov_burst", "reject",
+     [FaultSpec("query", at_batch=INJECT_AT, mode="oov", count=8)]),
+]
+
+
+def _build_engine(validation: str, *, drift: bool = False):
+    from repro.engine import EngineConfig, InferenceEngine
+
+    config = EngineConfig(
+        planner="asymmetric",
+        use_kernels="xla",
+        n_cores=1,
+        validation=validation,
+        integrity="checksum",
+        integrity_options={"check_every": CHECK_EVERY, "nan_guard": True},
+        max_batch=BATCH,
+    )
+    if drift:
+        config.drift = "replan"
+        # threshold 0 + patience 1: the first drift check triggers a replan,
+        # which the injector stalls; a 4-batch build timeout must abandon it.
+        config.drift_options = {
+            "check_every": 4,
+            "threshold": 0.0,
+            "patience": 1,
+            "cooldown": 100,
+            "overlap": True,
+            "build_timeout_batches": 4,
+        }
+    wl = small_workload("chaos", batch=BATCH)
+    return InferenceEngine.build(None, wl, config), wl
+
+
+def run_cell(name: str, validation: str, faults: list[FaultSpec]) -> dict:
+    """One (fault class, policy) cell: serve N_BATCHES with the scheduled
+    fault and measure detection / blast radius / recovery."""
+    engine, wl = _build_engine(validation, drift=(name == "stuck_replan"))
+    rows = [t.rows for t in wl.tables]
+    injector = FaultInjector(FaultPlan(faults, seed=SEED))
+    srv = engine.serve(max_wait_s=0.0, fault_injector=injector)
+    arm_buffer_corruption(injector, engine, srv)
+
+    rng = np.random.default_rng(SEED + 1)
+    handles = []
+    injected_queries = 0
+    for b in range(N_BATCHES):
+        idx = sample_workload(rng, wl, Zipf(1.2), BATCH)
+        idx, n_poisoned = injector.poison_queries(b, idx, rows)
+        injected_queries += n_poisoned
+        handles.extend(srv.submit_request(idx[:, q]) for q in range(BATCH))
+        srv.pump()
+    injector.release_stalls()
+    srv.drain()
+
+    s = srv.stats()
+    integ = s.get("integrity", {})
+    accounted = s["submitted"] == (
+        s["served"] + s["shed"] + s["rejected"] + s["failed"] + s["invalid"]
+        + s["pending"]
+    )
+    blast = s["failed"] + s["invalid"]
+
+    # detection signal + heal requirement per fault class
+    detect_events = [
+        e for e in integ.get("events", []) if e.get("regions")
+    ]
+    recovery = (
+        detect_events[0]["batch"] - (INJECT_AT + 1) if detect_events else 0
+    )
+    buffer_fault = name in ("bit_flip", "nan_rows")
+    if name == "none":
+        detected = not injector.events  # nothing injected, nothing fired
+    elif name == "step_crash":
+        detected = s["batch_failures"] >= 1
+    elif name == "bit_flip":
+        detected = integ.get("corruptions_detected", 0) >= 1
+    elif name == "nan_rows":
+        detected = (
+            integ.get("poisoned_batches", 0) >= 1
+            or integ.get("corruptions_detected", 0) >= 1
+        )
+    elif name == "stuck_replan":
+        detected = s.get("replan", {}).get("abandoned", 0) >= 1
+    else:  # oov_burst
+        detected = s["validation"]["oov_indices"] >= 1
+    healed = (
+        not buffer_fault
+        or (
+            integ.get("heals", 0) >= 1
+            and integ.get("heal_failures", 0) == 0
+            and not engine.verify_integrity()
+        )
+    )
+
+    cell = {
+        "fault": name,
+        "validation": validation,
+        "submitted": s["submitted"],
+        "served": s["served"],
+        "failed": s["failed"],
+        "invalid": s["invalid"],
+        "oov_indices": s["validation"]["oov_indices"],
+        "injected_queries": injected_queries,
+        "batch_failures": s["batch_failures"],
+        "corruptions_detected": integ.get("corruptions_detected", 0),
+        "heals": integ.get("heals", 0),
+        "heal_failures": integ.get("heal_failures", 0),
+        "quarantined_regions": integ.get("quarantined_regions", 0),
+        "poisoned_batches": integ.get("poisoned_batches", 0),
+        "replans_abandoned": s.get("replan", {}).get("abandoned", 0),
+        "faults_fired": len(injector.events),
+        "blast_radius": blast / max(s["submitted"], 1),
+        "recovery_batches": max(recovery, 0),
+        "detected": bool(detected),
+        "contained": bool(blast <= BATCH),
+        "accounted": bool(accounted),
+        "healed": bool(healed),
+        "recovered_in_budget": bool(max(recovery, 0) <= RECOVERY_BUDGET),
+    }
+    return cell
+
+
+def clip_parity(n_batches: int = 6) -> bool:
+    """Bit-parity invariant: identical traffic (with one poisoned burst)
+    through a ``clip``-validated server and a no-validator server must give
+    bitwise-identical per-query outputs — clip counts, it never rewrites."""
+    engine, wl = _build_engine("clip")
+    rows = [t.rows for t in wl.tables]
+
+    def serve_once(validator_override: bool) -> list[np.ndarray]:
+        kwargs = {"validator": None} if validator_override else {}
+        srv = engine.serve(max_wait_s=0.0, **kwargs)
+        # the injector only poisons the *traffic*; same seed -> same stream
+        inj = FaultInjector(FaultPlan(
+            [FaultSpec("query", at_batch=2, mode="oov", count=4)], seed=SEED
+        ))
+        rng = np.random.default_rng(SEED + 2)
+        handles = []
+        for b in range(n_batches):
+            idx = sample_workload(rng, wl, Zipf(1.2), BATCH)
+            idx, _ = inj.poison_queries(b, idx, rows)
+            handles.extend(srv.submit_request(idx[:, q]) for q in range(BATCH))
+            srv.pump()
+        srv.drain()
+        return [np.asarray(h.result()) for h in handles]
+
+    a = serve_once(False)
+    b = serve_once(True)
+    return len(a) == len(b) and all(
+        x.dtype == y.dtype and np.array_equal(x, y) for x, y in zip(a, b)
+    )
+
+
+def run(csv: bool = True, out_path: Path | None = None) -> dict:
+    cells = [run_cell(*cell) for cell in CELLS]
+    parity = clip_parity()
+    invariants = {
+        "all_detected": all(c["detected"] for c in cells),
+        "all_contained": all(c["contained"] for c in cells),
+        "accounting_identity": all(c["accounted"] for c in cells),
+        "buffer_faults_healed": all(c["healed"] for c in cells),
+        "recovery_in_budget": all(c["recovered_in_budget"] for c in cells),
+        "control_clean": (
+            cells[0]["failed"] == 0
+            and cells[0]["invalid"] == 0
+            and cells[0]["corruptions_detected"] == 0
+        ),
+        "clip_bit_parity": parity,
+    }
+    record = {
+        "workload": "chaos(small_workload)",
+        "n_batches": N_BATCHES,
+        "batch": BATCH,
+        "inject_at": INJECT_AT,
+        "check_every": CHECK_EVERY,
+        "recovery_budget": RECOVERY_BUDGET,
+        "seed": SEED,
+        "cells": cells,
+        "invariants": invariants,
+    }
+    if csv:
+        for c in cells:
+            print(
+                f"chaosbench,{c['fault']},{c['validation']},"
+                f"detected={c['detected']},blast={c['blast_radius']:.4f},"
+                f"recovery={c['recovery_batches']},healed={c['healed']},"
+                f"failed={c['failed']},invalid={c['invalid']}"
+            )
+        print(f"chaosbench,clip_parity,{parity}")
+        print(f"chaosbench,invariants,{invariants}")
+    out_path = out_path or _REPO_ROOT / "BENCH_chaos.json"
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--out", type=Path, default=None)
+    args = p.parse_args(argv)
+    record = run(out_path=args.out)
+    if not all(record["invariants"].values()):
+        raise SystemExit(f"chaosbench invariants failed: {record['invariants']}")
+
+
+if __name__ == "__main__":
+    main()

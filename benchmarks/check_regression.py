@@ -51,6 +51,19 @@ the tolerance on any gated metric.  Two baselines are gated (see
   baseline degrades, goodput holds near capacity.  The candidate is
   regenerated in full (the simulation is wall-clock-free and runs in ~1 s).
 
+``BENCH_chaos.json`` (chaosbench fault-containment matrix), when committed:
+
+* **per-cell booleans** — ``detected`` / ``contained`` / ``accounted`` /
+  ``healed`` / ``recovered_in_budget`` for every (fault class, validation
+  policy) cell: true in the baseline must stay true;
+* **blast radius** — gated up-only (a cell whose failed+invalid share grows
+  beyond tolerance fails; a zero-blast baseline cell must stay zero);
+* **recovery batches** — must not grow beyond baseline + the committed
+  recovery budget;
+* **invariants** — the record-level claims (all detected, all contained,
+  accounting identity, buffer faults healed, clip bit-parity).  The
+  candidate regenerates in full (seeded faults, XLA path, ~7 s on CPU).
+
 Wired into ``make bench-check`` (the tier-1 flow's companion target).
 """
 from __future__ import annotations
@@ -66,6 +79,7 @@ _BASELINE = _REPO_ROOT / "BENCH_embedding_layout.json"
 _DRIFT_BASELINE = _REPO_ROOT / "BENCH_drift.json"
 _DEDUP_BASELINE = _REPO_ROOT / "BENCH_dedup.json"
 _SERVING_BASELINE = _REPO_ROOT / "BENCH_serving.json"
+_CHAOS_BASELINE = _REPO_ROOT / "BENCH_chaos.json"
 
 _BYTES_KEYS = ("chunk_bytes",)
 _TRAFFIC_PATHS = ("fused", "xla_gather")
@@ -283,6 +297,56 @@ def compare_serving(
     return failures
 
 
+_CHAOS_BOOLS = (
+    "detected", "contained", "accounted", "healed", "recovered_in_budget"
+)
+
+
+def _chaos_cells(record: dict) -> dict[str, dict]:
+    """chaosbench record -> {``<fault>/<validation>``: cell}."""
+    return {
+        f"{c['fault']}/{c['validation']}": c
+        for c in record.get("cells", [])
+    }
+
+
+def compare_chaos(
+    baseline: dict, candidate: dict, *, tol: float = 0.20
+) -> list[str]:
+    """Chaos-bench gate: containment booleans must stay true, blast radius
+    must not grow (a zero-blast cell must stay zero), recovery must stay
+    inside the committed budget, and record invariants must not flip."""
+    failures: list[str] = []
+    base, cand = _chaos_cells(baseline), _chaos_cells(candidate)
+    budget = float(baseline.get("recovery_budget", 0))
+    for name, b in sorted(base.items()):
+        c = cand.get(name)
+        if c is None:
+            failures.append(f"chaos.{name}: missing from candidate")
+            continue
+        for k in _CHAOS_BOOLS:
+            if b.get(k, False) and not c.get(k, False):
+                failures.append(
+                    f"chaos.{name}.{k}: true in baseline, now false"
+                )
+        bb, cb = float(b.get("blast_radius", 0)), float(c.get("blast_radius", 0))
+        if cb > max(bb * (1.0 + tol), bb):  # zero baseline -> stay zero
+            failures.append(
+                f"chaos.{name}.blast_radius: {cb:.4f} vs baseline {bb:.4f}"
+            )
+        br = float(b.get("recovery_batches", 0))
+        cr = float(c.get("recovery_batches", 0))
+        if cr > max(br, budget):
+            failures.append(
+                f"chaos.{name}.recovery_batches: {cr:.0f} vs baseline "
+                f"{br:.0f} (budget {budget:.0f})"
+            )
+    for k, v in baseline.get("invariants", {}).items():
+        if v and not candidate.get("invariants", {}).get(k, False):
+            failures.append(f"chaos invariant {k!r}: true in baseline, now false")
+    return failures
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--baseline", type=Path, default=_BASELINE)
@@ -317,6 +381,14 @@ def main(argv=None) -> int:
     )
     p.add_argument("--skip-serving", action="store_true",
                    help="skip the serving robustness bench gate")
+    p.add_argument("--baseline-chaos", type=Path, default=_CHAOS_BASELINE)
+    p.add_argument(
+        "--candidate-chaos", type=Path, default=None,
+        help="chaos bench JSON to check; omitted = regenerate (seeded "
+             "fault matrix on the XLA path, ~7 s on CPU)",
+    )
+    p.add_argument("--skip-chaos", action="store_true",
+                   help="skip the fault-containment bench gate")
     args = p.parse_args(argv)
 
     baseline = json.loads(args.baseline.read_text())
@@ -398,6 +470,28 @@ def main(argv=None) -> int:
             if name in sc and sb[name] > 0:
                 delta = (sc[name] / sb[name] - 1) * 100
                 print(f"[bench-check] {name}: {sc[name]:.2f} ({delta:+.1f}%)")
+
+    if not args.skip_chaos and args.baseline_chaos.exists():
+        chaos_base = json.loads(args.baseline_chaos.read_text())
+        if args.candidate_chaos is not None:
+            chaos_cand = json.loads(args.candidate_chaos.read_text())
+        else:
+            sys.path.insert(0, str(_REPO_ROOT))
+            from benchmarks.chaosbench import run as chaos_run
+
+            tmp = Path(tempfile.mkstemp(suffix=".json")[1])
+            chaos_cand = chaos_run(csv=False, out_path=tmp)
+            print(f"[bench-check] regenerated chaos candidate -> {tmp}")
+        failures += compare_chaos(chaos_base, chaos_cand, tol=args.bytes_tol)
+        cb, cc = _chaos_cells(chaos_base), _chaos_cells(chaos_cand)
+        for name in sorted(cb):
+            if name in cc:
+                c = cc[name]
+                print(
+                    f"[bench-check] chaos.{name}: detected={c['detected']} "
+                    f"blast={c['blast_radius']:.4f} "
+                    f"recovery={c['recovery_batches']}"
+                )
 
     if failures:
         print(f"[bench-check] FAIL — {len(failures)} regression(s):")

@@ -142,7 +142,8 @@ def simulate(offered_x: float, *, bounded: bool, seed: int = 0) -> dict:
     s = srv.stats()
     makespan = clock.t - float(arrivals[0])
     accounted = s["submitted"] == (
-        s["served"] + s["shed"] + s["rejected"] + s["failed"] + s["pending"]
+        s["served"] + s["shed"] + s["rejected"] + s["failed"] + s["invalid"]
+        + s["pending"]
     )
     return {
         "offered_x": offered_x,

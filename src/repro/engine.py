@@ -54,12 +54,16 @@ __all__ = [
     "DriftPolicy",
     "EngineConfig",
     "HARDWARE_PRESETS",
+    "INTEGRITY_POLICIES",
     "InferenceEngine",
+    "IntegrityPolicy",
     "PLACEMENT_POLICIES",
     "PlacementPolicy",
     "PolicyRegistry",
     "TUNING_POLICIES",
     "TuningPolicy",
+    "VALIDATION_POLICIES",
+    "ValidationPolicy",
 ]
 
 
@@ -94,6 +98,30 @@ class TuningPolicy(Protocol):
     ``block_r=`` / ``block_b=``)."""
 
     def pack_kwargs(self, **options) -> dict:
+        ...
+
+
+@runtime_checkable
+class ValidationPolicy(Protocol):
+    """Builds the server's query-index validator (DESIGN.md §9): a callable
+    ``payloads -> (payloads', counts, bad)`` run at batch release, or
+    ``None`` for no validation.  ``rows`` are the workload's per-table
+    vocabulary sizes."""
+
+    def validator(self, *, rows, **options):
+        ...
+
+
+@runtime_checkable
+class IntegrityPolicy(Protocol):
+    """Wires packed-buffer corruption detection: ``manifest`` freezes the
+    pack-time checksums (``None`` disables), ``server_config`` returns the
+    cadence/guard knobs the server runs them under."""
+
+    def manifest(self, packed, plan, **options):
+        ...
+
+    def server_config(self, **options):
         ...
 
 
@@ -141,6 +169,8 @@ PLACEMENT_POLICIES = PolicyRegistry("placement")
 ACCESS_POLICIES = PolicyRegistry("access-reduction")
 TUNING_POLICIES = PolicyRegistry("tuning")
 DRIFT_POLICIES = PolicyRegistry("drift")
+VALIDATION_POLICIES = PolicyRegistry("validation")
+INTEGRITY_POLICIES = PolicyRegistry("integrity")
 
 
 class _PlannerPlacement:
@@ -229,6 +259,57 @@ DRIFT_POLICIES.register("none", _NoDrift)
 DRIFT_POLICIES.register("replan", _ReplanDrift)
 
 
+class _IndexValidation:
+    """Builtin validation policies: the three OOV/negative-index modes of
+    :class:`repro.serving.validation.IndexValidator` (``clip`` is today's
+    pass-through behavior — bit-identical outputs, counters only)."""
+
+    def __init__(self, mode: str):
+        self.mode = mode
+
+    def validator(self, *, rows, **options):
+        from repro.serving.validation import payload_validator
+
+        return payload_validator(rows, self.mode)
+
+
+for _mode in ("clip", "null-row", "reject"):
+    VALIDATION_POLICIES.register(
+        _mode, (lambda m: lambda: _IndexValidation(m))(_mode)
+    )
+
+
+class _NoIntegrity:
+    def manifest(self, packed, plan, **options):
+        return None
+
+    def server_config(self, **options):
+        return None
+
+
+class _ChecksumIntegrity:
+    """Builtin ``checksum`` policy: per-region CRC32 manifest at pack time
+    (:class:`repro.core.integrity.IntegrityManifest`), verified on a batch
+    cadence + on drift hot-swaps, with NaN/Inf output guards.  Options:
+    ``check_every`` (batches between sweeps, default 64; 0 = only on
+    hot-swap/poisoned-output) and ``nan_guard`` (default True)."""
+
+    def manifest(self, packed, plan, **options):
+        from repro.core.integrity import IntegrityManifest
+
+        return IntegrityManifest.from_packed(packed, plan)
+
+    def server_config(self, **options):
+        return {
+            "check_every": int(options.get("check_every", 64)),
+            "nan_guard": bool(options.get("nan_guard", True)),
+        }
+
+
+INTEGRITY_POLICIES.register("none", _NoIntegrity)
+INTEGRITY_POLICIES.register("checksum", _ChecksumIntegrity)
+
+
 # --------------------------------------------------------------------------
 # EngineConfig
 # --------------------------------------------------------------------------
@@ -273,6 +354,13 @@ class EngineConfig:
     # online replanning (DESIGN.md §5)
     drift: str = "none"
     drift_options: dict = dataclasses.field(default_factory=dict)
+    # data-plane integrity (DESIGN.md §9): input validation + buffer
+    # corruption detection.  validation="clip" is today's behavior made
+    # explicit (pass-through + counters, bit-identical outputs).
+    validation: str = "clip"
+    validation_options: dict = dataclasses.field(default_factory=dict)
+    integrity: str = "none"
+    integrity_options: dict = dataclasses.field(default_factory=dict)
     # executor
     layout: str = "ragged"
     use_kernels: str = "fused"  # "fused" | "xla"
@@ -352,12 +440,21 @@ class EngineConfig:
                 raise ValueError("access reduction requires layout='ragged'")
             if self.use_kernels != "fused":
                 raise ValueError("access reduction requires use_kernels='fused'")
+        if self.integrity != "none":
+            check_every = self.integrity_options.get("check_every", 64)
+            if not isinstance(check_every, int) or check_every < 0:
+                raise ValueError(
+                    f"integrity_options['check_every'] must be an int >= 0, "
+                    f"got {check_every!r}"
+                )
         # fail early on unknown policy names (before any planning work)
         for reg, name in (
             (PLACEMENT_POLICIES, self.planner),
             (ACCESS_POLICIES, self.access),
             (TUNING_POLICIES, self.tuning),
             (DRIFT_POLICIES, self.drift),
+            (VALIDATION_POLICIES, self.validation),
+            (INTEGRITY_POLICIES, self.integrity),
         ):
             reg.create(name)
 
@@ -423,6 +520,7 @@ class InferenceEngine:
         freqs,
         table_data,
         cost_model,
+        manifest=None,
     ):
         self.config = config
         self.workload = workload
@@ -431,6 +529,7 @@ class InferenceEngine:
         self.mesh = mesh
         self.freqs = freqs
         self.cost_model = cost_model
+        self.manifest = manifest  # pack-time integrity checksums (or None)
         self._table_data = table_data
         self._server = None
 
@@ -517,6 +616,11 @@ class InferenceEngine:
             table_data = list(tables)
         packed = bag.pack(table_data, **tuning.pack_kwargs(**config.tuning_options))
 
+        integrity = INTEGRITY_POLICIES.create(config.integrity)
+        manifest = integrity.manifest(
+            packed, bag.plan, **config.integrity_options
+        )
+
         if mesh is None:
             mesh = compat.make_mesh((1, jax.device_count()), ("data", "model"))
         return cls(
@@ -528,6 +632,7 @@ class InferenceEngine:
             freqs=freqs,
             table_data=table_data,
             cost_model=model,
+            manifest=manifest,
         )
 
     def reference_view(self) -> "InferenceEngine":
@@ -549,6 +654,7 @@ class InferenceEngine:
             freqs=self.freqs,
             table_data=self._table_data,
             cost_model=self.cost_model,
+            manifest=self.manifest,
         )
         return view
 
@@ -562,6 +668,30 @@ class InferenceEngine:
             mesh=self.mesh,
             freqs=freqs,
         )
+
+    # -- data-plane integrity (DESIGN.md §9) --------------------------------
+
+    def verify_integrity(self) -> list[tuple]:
+        """Re-checksum the packed buffers against the pack-time manifest;
+        returns the corrupt region keys (empty = clean, or no manifest)."""
+        if self.manifest is None:
+            return []
+        return self.manifest.verify(self.packed)
+
+    def heal(self) -> dict:
+        """Targeted repair of corrupt buffer regions: re-materialize them
+        from the source tables (bit-exact) or zero-quarantine regions with
+        no source, replacing ``self.packed``.  The jitted steps bake the
+        packed arrays as constants — after a heal the caller must rebuild
+        its step (``serve``'s integrity wiring does this and swaps it in
+        atomically)."""
+        if self.manifest is None:
+            return {"healed": [], "quarantined": [], "clean": True}
+        new_packed, report = self.manifest.repair(
+            self.packed, self.plan, self.workload.tables, self._table_data
+        )
+        self.packed = new_packed
+        return report
 
     # -- execution ----------------------------------------------------------
 
@@ -617,6 +747,7 @@ class InferenceEngine:
         split_fn: Callable[[Any, int], Sequence[Any]] | None = None,
         max_batch: int | None = None,
         max_wait_s: float | None = None,
+        fault_injector=None,
         **server_kwargs,
     ):
         """Build a :class:`repro.serving.server.Server` driven by this
@@ -635,30 +766,59 @@ class InferenceEngine:
         fused kernel path, a *fallback step* built from ``make_step`` over
         :meth:`reference_view` (the XLA reference path on the same packed
         tables) serves batches in degraded mode after repeated failures.
+
+        Data-plane integrity (DESIGN.md §9) is wired per the config's
+        ``validation``/``integrity`` policies: the validator runs at batch
+        release, and with an integrity manifest the step carries
+        ``integrity_verify``/``integrity_repair`` hooks the server's
+        checksum cadence + NaN guard act through — a repair re-materializes
+        the corrupt regions and swaps a freshly built step in atomically.
+        ``fault_injector`` threads a seeded
+        :class:`repro.serving.faults.FaultInjector` through the server and
+        the replan path (chaosbench / fault-containment tests).
         """
         from repro.serving.server import Server
 
         maker = make_step or (lambda eng: eng._default_step())
-        step0 = maker(self)
-        if getattr(step0, "bag", None) is None:
-            step0.bag = self.bag
 
+        def _make_fallback(eng):
+            if self.config.degrade_after > 0 and self.config.use_kernels == "fused":
+                # built eagerly but jitted lazily: the reference step
+                # compiles only if a batch actually falls back to it.
+                return maker(eng.reference_view())
+            return None
+
+        def _wire(step, eng):
+            """Attach the engine-side hooks the server's integrity machinery
+            (and a drift hot-swap's shadow) act through.  Hooks bind to the
+            step's OWN engine so they stay correct across swaps."""
+            if getattr(step, "bag", None) is None:
+                step.bag = eng.bag
+            step.rebuild = lambda: _wire(maker(eng), eng)
+            if eng.manifest is not None:
+                step.integrity_verify = eng.verify_integrity
+
+                def _repair(bad):
+                    report = eng.heal()
+                    return {
+                        "step_fn": _wire(maker(eng), eng),
+                        "fallback_step_fn": _make_fallback(eng),
+                        "report": report,
+                    }
+
+                step.integrity_repair = _repair
+            return step
+
+        step0 = _wire(maker(self), self)
         fallback = server_kwargs.pop("fallback_step_fn", None)
-        if (
-            fallback is None
-            and self.config.degrade_after > 0
-            and self.config.use_kernels == "fused"
-        ):
-            # built eagerly but jitted lazily: the reference step compiles
-            # only if a batch actually falls back to it.
-            fallback = maker(self.reference_view())
+        if fallback is None:
+            fallback = _make_fallback(self)
 
         def _replan(measured):
+            if fault_injector is not None:
+                fault_injector.fire("replan", batch=None)
             shadow_engine = self.rebuild(measured)
-            step = maker(shadow_engine)
-            if getattr(step, "bag", None) is None:
-                step.bag = shadow_engine.bag
-            return step
+            return _wire(maker(shadow_engine), shadow_engine)
 
         baseline = self.freqs
         if baseline is None:
@@ -675,6 +835,16 @@ class InferenceEngine:
             ),
             replan=_replan,
             **self.config.drift_options,
+        )
+
+        validation_policy = VALIDATION_POLICIES.create(self.config.validation)
+        validator = validation_policy.validator(
+            rows=[t.rows for t in self.workload.tables],
+            **self.config.validation_options,
+        )
+        integrity_policy = INTEGRITY_POLICIES.create(self.config.integrity)
+        integrity_cfg = integrity_policy.server_config(
+            **self.config.integrity_options
         )
 
         kwargs = dict(
@@ -697,6 +867,9 @@ class InferenceEngine:
             fallback_step_fn=fallback,
             degrade_after=self.config.degrade_after,
             probe_every=self.config.probe_every,
+            validator=validator,
+            integrity=integrity_cfg,
+            fault_injector=fault_injector,
         )
         kwargs.update(server_kwargs)  # explicit kwargs override the config
         srv = Server(step0, **kwargs)
@@ -772,4 +945,11 @@ class InferenceEngine:
         if self.config.drift != "none":
             lines.append(f"drift policy={self.config.drift} "
                          f"{self.config.drift_options}")
+        if self.config.validation != "clip" or self.config.integrity != "none":
+            regions = len(self.manifest.checksums) if self.manifest else 0
+            lines.append(
+                f"integrity validation={self.config.validation} "
+                f"checksums={self.config.integrity}"
+                + (f" ({regions} regions)" if regions else "")
+            )
         return "\n".join(lines)

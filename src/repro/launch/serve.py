@@ -58,16 +58,22 @@ def _resolve_dists(spec: str) -> list[tuple[str, object]]:
 
 def build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser()
-    # driver flags (what traffic to serve, how much)
-    p.add_argument("--workload", default="smoke")
+    # driver flags (what traffic to serve, how much).  --workload /
+    # --distribution default to None sentinels so a --preset can fill them;
+    # without one they resolve to the historical "smoke" / "real".
+    p.add_argument("--workload", default=None)
     p.add_argument("--batch", type=int, default=None,
                    help="serving batch size (default: the config's "
                         "max_batch, 256)")
     p.add_argument("--queries", type=int, default=2048)
-    p.add_argument("--distribution", default="real",
+    p.add_argument("--distribution", default=None,
                    help="query stream: uniform | real | fixed | all | "
                         "zipf:<a> | hotset:<frac>:<mass>[:<off>] | "
-                        "<workload preset>")
+                        "<workload preset> (default: real)")
+    p.add_argument("--preset", default=None,
+                   help="curated preset pack (workload + traffic + "
+                        "EngineConfig) from src/repro/configs/presets, "
+                        "e.g. taobao-zipf12; explicit flags still override")
     p.add_argument("--drift", default=None,
                    help="drift schedule spec routed through the Server, "
                         "e.g. 'flip' or 'uniform@8,zipf:1.2@8,"
@@ -125,13 +131,35 @@ _CLI_DRIFT_DEFAULTS = {"check_every": 4, "patience": 2, "cooldown": 8}
 def config_from_args(args) -> EngineConfig:
     """Resolve the CLI namespace into one :class:`EngineConfig`.
 
-    Precedence: ``--config`` file (else defaults) < legacy flags (each with
-    a :class:`DeprecationWarning`) < ``--set`` overrides.  Also bakes in the
-    serve CLI's historical choices: ``shard_rocks=True`` for the asymmetric
-    planner (the TPU profile) and the PR3 drift-trigger cadence.
+    Precedence: ``--preset`` / ``--config`` base (mutually exclusive, else
+    defaults) < legacy flags (each with a :class:`DeprecationWarning`) <
+    ``--set`` overrides.  A preset also fills ``args.workload`` /
+    ``args.distribution`` unless those flags were given explicitly.  Also
+    bakes in the serve CLI's historical choices: ``shard_rocks=True`` for
+    the asymmetric planner (the TPU profile) and the PR3 drift-trigger
+    cadence.
     """
-    config = (EngineConfig.load(args.config) if args.config
-              else EngineConfig())
+    preset = None
+    if getattr(args, "preset", None):
+        if args.config:
+            raise SystemExit("--preset and --config are mutually exclusive")
+        from repro.configs.presets import load_preset
+
+        preset = load_preset(args.preset)
+    if preset is not None:
+        config = EngineConfig.from_dict(preset["config"])
+    elif args.config:
+        config = EngineConfig.load(args.config)
+    else:
+        config = EngineConfig()
+    # resolve the driver-flag sentinels: explicit flag > preset > historical
+    # default — main() reads the resolved values back off the namespace.
+    if args.workload is None:
+        args.workload = preset["workload"] if preset else "smoke"
+    if args.distribution is None:
+        args.distribution = (
+            preset.get("distribution") if preset else None
+        ) or "real"
 
     if args.planner is not None:
         _warn_legacy("planner", "planner")
@@ -200,12 +228,12 @@ def config_from_args(args) -> EngineConfig:
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
+    config = config_from_args(args)  # also resolves --preset into args
     known = ["smoke"]
     from repro.data.workloads import WORKLOADS
 
     if args.workload not in known + list(WORKLOADS):
         raise SystemExit(f"unknown workload {args.workload!r}")
-    config = config_from_args(args)
     batch = config.max_batch  # precedence: --config < --batch < --set
     if args.save_config:
         config.save(args.save_config)
@@ -304,20 +332,38 @@ def main(argv=None):
         if unserved:
             print(f"[serve] WARNING: {len(unserved)} queries left unserved")
         s = srv.stats()
-        print(f"[serve] dist={label:8s} p50={s['p50_us']:9.0f}us "
-              f"p99={s['p99_us']:9.0f}us tps={s['tps']:9.0f}")
+        print(f"[serve] dist={label:8s} p50={_fmt_us(s['p50_us'])} "
+              f"p99={_fmt_us(s['p99_us'])} tps={s['tps']:9.0f}")
         _print_robustness(s)
+
+
+def _fmt_us(v) -> str:
+    """An idle server has no latency samples: percentiles come back None
+    (not NaN) and must print cleanly."""
+    return "     idle" if v is None else f"{v:9.0f}us"
 
 
 def _print_robustness(s: dict) -> None:
     """One accounting line whenever the run saw any robustness event."""
     if any(s.get(k) for k in ("rejected", "shed", "deadline_misses",
-                              "batch_failures", "degraded_batches")):
+                              "batch_failures", "degraded_batches",
+                              "invalid")):
         print(f"[serve]   submitted={s['submitted']} served={s['served']} "
               f"shed={s['shed']} rejected={s['rejected']} "
+              f"invalid={s['invalid']} "
               f"deadline_misses={s['deadline_misses']} "
               f"batch_failures={s['batch_failures']} "
               f"degraded_batches={s['degraded_batches']}")
+    val = s.get("validation") or {}
+    if val.get("oov_indices") or val.get("negative_indices"):
+        print(f"[serve]   validation mode={val['mode']} "
+              f"oov={val['oov_indices']} negative={val['negative_indices']}")
+    integ = s.get("integrity") or {}
+    if integ.get("corruptions_detected") or integ.get("poisoned_batches"):
+        print(f"[serve]   integrity corruptions={integ['corruptions_detected']} "
+              f"heals={integ['heals']} "
+              f"quarantined={integ['quarantined_regions']} "
+              f"poisoned_batches={integ['poisoned_batches']}")
 
 
 def _serve_drift(args, wl, schedule, engine, make_step, split, *, n_dense):
@@ -339,8 +385,8 @@ def _serve_drift(args, wl, schedule, engine, make_step, split, *, n_dense):
     if unserved:
         print(f"[serve] WARNING: {len(unserved)} queries left unserved")
     s = srv.stats()
-    line = (f"[serve] drift p50={s['p50_us']:9.0f}us p99={s['p99_us']:9.0f}us "
-            f"tps={s['tps']:9.0f}")
+    line = (f"[serve] drift p50={_fmt_us(s['p50_us'])} "
+            f"p99={_fmt_us(s['p99_us'])} tps={s['tps']:9.0f}")
     if "replan" in s:
         r = s["replan"]
         line += (f" replans={r['replans']} parity_failures="

@@ -31,17 +31,21 @@ class LatencyTracker:
         """Admission-queue depth at a batch release (post-release)."""
         self.depths.append(int(depth))
 
-    def percentile(self, q: float) -> float:
+    def percentile(self, q: float) -> float | None:
+        """Percentile over the sliding window; ``None`` (not NaN) with no
+        samples yet — an idle server has *no* latency, and ``None`` survives
+        JSON round-trips and ``is None`` guards where NaN silently poisons
+        comparisons and formatting."""
         if not self.samples:
-            return float("nan")
+            return None
         return float(np.percentile(np.array(self.samples), q))
 
     @property
-    def p50(self) -> float:
+    def p50(self) -> float | None:
         return self.percentile(50)
 
     @property
-    def p99(self) -> float:
+    def p99(self) -> float | None:
         return self.percentile(99)
 
     @property
@@ -49,9 +53,10 @@ class LatencyTracker:
         return self.queries / self.t_total if self.t_total else 0.0
 
     def summary(self) -> dict:
+        p50, p99 = self.p50, self.p99
         out = {
-            "p50_us": self.p50 * 1e6,
-            "p99_us": self.p99 * 1e6,
+            "p50_us": None if p50 is None else p50 * 1e6,
+            "p99_us": None if p99 is None else p99 * 1e6,
             "tps": self.throughput,
             "n": len(self.samples),
         }

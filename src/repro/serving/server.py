@@ -44,11 +44,32 @@ degrade-gracefully-under-spikes requirement of Park et al. (1811.09886):
   polled across subsequent ``pump()`` calls, so the pump keeps serving
   while the replacement plan builds (the overlap-replan protocol).
 
+Data-plane integrity (DESIGN.md §9) rides the same pump:
+
+* **input validation** — a ``validator`` (built by the engine's validation
+  policy, :mod:`repro.serving.validation`) runs at batch release, before
+  any device work: OOV/negative index counters always, sanitization under
+  ``null-row``, and per-request failure with :class:`InvalidQueryError`
+  under ``reject`` (blast radius: the offending request only);
+* **corruption detection + self-heal** — when the engine wires an
+  integrity manifest (``integrity={"check_every": N, "nan_guard": True}``),
+  the pump re-checksums the packed buffers every N batches and NaN/Inf-
+  guards every batch output (:class:`PoisonedOutputError` fails only that
+  batch).  A detected mismatch triggers a targeted repair through the
+  step's ``integrity_repair`` hook — corrupt regions are re-materialized
+  from the source tables (or zero-quarantined) and the repaired step swaps
+  in atomically, exactly like a drift hot-swap.  Drift hot-swaps verify the
+  shadow's own manifest before cutover;
+* **fault injection** — a :class:`repro.serving.faults.FaultInjector` fires
+  seeded faults at the named points (``step``/``buffer``) so
+  ``benchmarks/chaosbench.py`` can measure detection + blast radius.
+
 Every submitted request is accounted for exactly once::
 
-    submitted == served + shed + rejected + failed + pending
+    submitted == served + shed + rejected + failed + invalid + pending
 
-(``deadline_misses`` counts the deadline-shed subset of ``shed``; the
+(``deadline_misses`` counts the deadline-shed subset of ``shed``;
+``invalid`` counts requests failed by ``reject``-mode validation; the
 identity is surfaced by :meth:`Server.stats` and asserted by the
 fault-injection tests and ``benchmarks/servebench.py``.)
 
@@ -69,7 +90,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -81,6 +102,8 @@ __all__ = [
     "Batcher",
     "DeadlineExceeded",
     "DriftConfig",
+    "InvalidQueryError",
+    "PoisonedOutputError",
     "Query",
     "QueueFull",
     "RequestHandle",
@@ -113,6 +136,18 @@ class DeadlineExceeded(ServingError):
 class BatchExecutionError(ServingError):
     """The batch this request rode in failed in ``step_fn``; the original
     executor error is chained as ``__cause__``."""
+
+
+class InvalidQueryError(ServingError):
+    """The request failed input validation under the ``reject`` policy
+    (out-of-vocab or negative indices); it never executed, and the rest of
+    its batch served normally."""
+
+
+class PoisonedOutputError(BatchExecutionError):
+    """The batch executed but produced NaN/Inf output (the corruption
+    guard); only this batch's handles fail, and an integrity sweep runs
+    immediately to find and heal the poisoned buffer region."""
 
 
 class RequestHandle:
@@ -269,6 +304,13 @@ class DriftConfig:
     ``False`` (default) builds the shadow inline on the triggering batch —
     deterministic, but the pump stalls for the build.
 
+    ``build_timeout_batches`` — an overlapped build still alive after this
+    many further served batches is *abandoned*: the server stops polling
+    it, counts ``replans_abandoned``, and becomes eligible to trigger a
+    fresh replan after the cooldown — a wedged build thread must not pin
+    the server to a stale plan forever.  ``None`` (default) waits
+    indefinitely (the pre-existing behavior).
+
     ``metric`` — ``"topmass"`` (default): the sample-robust
     :func:`repro.data.distributions.drift_distance`; ``"l1"``: raw exact L1
     distance (the textbook trigger — beware its finite-sample bias on large
@@ -289,6 +331,7 @@ class DriftConfig:
     parity_rtol: float = 1e-4
     parity_atol: float = 1e-5
     overlap: bool = False
+    build_timeout_batches: int | None = None
 
 
 class _ShadowBuild(threading.Thread):
@@ -301,12 +344,25 @@ class _ShadowBuild(threading.Thread):
         self.measured = measured
         self.step_fn = None
         self.error: BaseException | None = None
+        self.abandoned = False  # set by the pump when the build times out
 
     def run(self):
         try:
             self.step_fn = self.replan(self.measured)
         except BaseException as e:  # surfaced as a replan_error by the pump
             self.error = e
+
+
+def _tree_finite(x) -> bool:
+    """NaN/Inf guard over a batch-output pytree (floating leaves only)."""
+    if isinstance(x, dict):
+        return all(_tree_finite(v) for v in x.values())
+    if isinstance(x, (list, tuple)):
+        return all(_tree_finite(v) for v in x)
+    arr = np.asarray(x)
+    if arr.dtype.kind != "f":
+        return True
+    return bool(np.all(np.isfinite(arr)))
 
 
 def _tree_allclose(a, b, rtol: float, atol: float) -> bool:
@@ -343,6 +399,9 @@ class Server:
         degrade_after: int = 3,
         probe_every: int = 4,
         clock: Callable[[], float] | None = None,
+        validator: Callable[[list[Any]], tuple] | None = None,
+        integrity: Mapping[str, Any] | None = None,
+        fault_injector: Any | None = None,
     ):
         if max_batch <= 0:
             raise ValueError(f"max_batch must be positive, got {max_batch}")
@@ -377,14 +436,45 @@ class Server:
         self.admission = admission
         self.deadline_s = deadline_s
         # request accounting: submitted == served + shed + rejected + failed
-        # + pending (queue), with deadline_misses the deadline-shed subset
-        # of shed.  Every path below keeps the identity.
+        # + invalid + pending (queue), with deadline_misses the deadline-shed
+        # subset of shed.  Every path below keeps the identity.
         self.submitted = 0
         self.served = 0
         self.rejected = 0
         self.shed = 0
         self.deadline_misses = 0
         self.failed = 0
+        self.invalid = 0
+        # input validation (DESIGN.md §9): counters always, sanitization /
+        # per-request rejection per the validator's mode.
+        self.validator = validator
+        self.oov_indices = 0
+        self.negative_indices = 0
+        # buffer integrity: checksum cadence + NaN output guard, acting
+        # through the step's integrity_verify/integrity_repair hooks.
+        self.integrity_cfg = dict(integrity) if integrity else None
+        self._integrity_every = (
+            int(self.integrity_cfg.get("check_every", 0))
+            if self.integrity_cfg
+            else 0
+        )
+        self._nan_guard = (
+            bool(self.integrity_cfg.get("nan_guard", True))
+            if self.integrity_cfg
+            else False
+        )
+        self.integrity_checks = 0
+        self.corruptions_detected = 0
+        self.heals = 0
+        self.heal_failures = 0
+        self.quarantined_regions = 0
+        self.poisoned_batches = 0
+        self.integrity_events: list[dict] = []
+        # deterministic fault injection (chaosbench / tests)
+        self.fault_injector = fault_injector
+        # monotone executed-batch counter (includes failed batches): the
+        # clock the integrity cadence and fault schedules run on.
+        self.total_batches = 0
         # fault containment / degraded mode
         self.fallback_step_fn = fallback_step_fn
         self.degrade_after = degrade_after
@@ -412,6 +502,7 @@ class Server:
         self.replans = 0
         self.parity_failures = 0
         self.replan_errors = 0
+        self.replans_abandoned = 0
         self.replan_events: list[dict] = []
         self.last_drift = 0.0
         self.drift_checks = 0
@@ -430,6 +521,7 @@ class Server:
         self._strikes = 0
         self._rest_until = 0
         self._shadow_build: _ShadowBuild | None = None
+        self._shadow_started = 0  # _batches_served when the build launched
         # (payloads, out) of the most recent successful batch — the parity
         # probe drain() uses when an overlapped build outlives the traffic.
         self._last_probe: tuple[list[Any], Any] | None = None
@@ -527,6 +619,14 @@ class Server:
                 live.append(q)
         return live
 
+    def _primary(self, payloads: list[Any]) -> Any:
+        """The primary step call, with the ``step`` fault point in front of
+        it — an injected crash raises *inside* the containment try, exactly
+        where a real executor fault would."""
+        if self.fault_injector is not None:
+            self.fault_injector.fire("step", batch=self.total_batches)
+        return self.step_fn(payloads)
+
     def _execute(self, payloads: list[Any]) -> Any:
         """Run the step under the fault-containment state machine.
 
@@ -541,7 +641,7 @@ class Server:
                 self._batches_since_probe = 0
                 self.probes += 1
                 try:
-                    out = self.step_fn(payloads)
+                    out = self._primary(payloads)
                 except Exception:
                     self.probe_failures += 1
                 else:
@@ -551,7 +651,7 @@ class Server:
             self.degraded_batches += 1
             return self.fallback_step_fn(payloads)
         try:
-            out = self.step_fn(payloads)
+            out = self._primary(payloads)
         except Exception:
             self._consecutive_failures += 1
             if (
@@ -580,7 +680,17 @@ class Server:
         batch = self._shed_expired(batch, now)
         if not batch:
             return None
+        if self.validator is not None:
+            batch = self._validate(batch)
+            if not batch:
+                return None
+        if self.fault_injector is not None:
+            # the silent-corruption point: mutating faults damage the packed
+            # buffers here WITHOUT telling the server — detection must come
+            # from the checksum cadence / NaN guard below.
+            self.fault_injector.fire("buffer", batch=self.total_batches)
         payloads = [q.payload for q in batch]
+        self.total_batches += 1
         t0 = self.clock()
         try:
             out = self._execute(payloads)
@@ -596,6 +706,21 @@ class Server:
             for q in batch:
                 if q.handle is not None:
                     q.handle._set_error(err)
+            self._maybe_integrity_check()
+            return None
+        if self._nan_guard and not _tree_finite(out):
+            # poisoned output: fail only this batch, then hunt the source —
+            # an immediate integrity sweep finds + heals the bad region.
+            self.poisoned_batches += 1
+            self.batch_failures += 1
+            self.failed += len(batch)
+            err = PoisonedOutputError(
+                f"batch of {len(batch)} produced non-finite output"
+            )
+            for q in batch:
+                if q.handle is not None:
+                    q.handle._set_error(err)
+            self._integrity_sweep(reason="poisoned-output")
             return None
         dt = self.clock() - t0
         # hedging: a straggling execution is retried on a backup replica; we
@@ -633,7 +758,91 @@ class Server:
             if self.drift.overlap:
                 self._last_probe = (payloads, out)
             self._observe(payloads, out)
+        self._maybe_integrity_check()
         return out
+
+    # -- data-plane integrity (DESIGN.md §9) --------------------------------
+
+    def _validate(self, batch: list[Query]) -> list[Query]:
+        """Release-time input validation: count OOV/negative indices, apply
+        the validator's sanitization, and (``reject`` mode) fail only the
+        offending requests' handles.  A crashing validator fails the whole
+        batch as invalid rather than poisoning the pump."""
+        payloads = [q.payload for q in batch]
+        try:
+            payloads, counts, bad = self.validator(payloads)
+        except Exception as e:
+            self.invalid += len(batch)
+            err = InvalidQueryError(f"validator failed on batch: {e!r}")
+            err.__cause__ = e
+            for q in batch:
+                if q.handle is not None:
+                    q.handle._set_error(err)
+            return []
+        self.oov_indices += int(counts.get("oov", 0))
+        self.negative_indices += int(counts.get("negative", 0))
+        live: list[Query] = []
+        for i, q in enumerate(batch):
+            if i in bad:
+                self.invalid += 1
+                if q.handle is not None:
+                    q.handle._set_error(InvalidQueryError(bad[i]))
+            else:
+                q.payload = payloads[i]
+                live.append(q)
+        return live
+
+    def _maybe_integrity_check(self) -> None:
+        if self._integrity_every and self.total_batches % self._integrity_every == 0:
+            self._integrity_sweep(reason="cadence")
+
+    def _integrity_sweep(self, reason: str) -> None:
+        """Verify the live step's buffer checksums; on a mismatch, repair
+        through the step's ``integrity_repair`` hook and swap the repaired
+        step in atomically (the same cut-over a drift hot-swap uses)."""
+        verify = getattr(self.step_fn, "integrity_verify", None)
+        if verify is None:
+            return
+        self.integrity_checks += 1
+        try:
+            bad = verify()
+        except Exception as e:
+            self.heal_failures += 1
+            self.integrity_events.append(
+                {"batch": self.total_batches, "reason": reason,
+                 "error": repr(e)}
+            )
+            return
+        if not bad:
+            return
+        self.corruptions_detected += len(bad)
+        event = {
+            "batch": self.total_batches,
+            "reason": reason,
+            "regions": [list(r) for r in bad],
+            "healed": False,
+        }
+        repair = getattr(self.step_fn, "integrity_repair", None)
+        if repair is None:
+            self.heal_failures += 1
+        else:
+            try:
+                fix = repair(bad)
+            except Exception as e:
+                self.heal_failures += 1
+                event["error"] = repr(e)
+            else:
+                self.step_fn = fix["step_fn"]  # atomic cut-over
+                if fix.get("fallback_step_fn") is not None:
+                    # the fallback closes over the same buffers: a healed
+                    # primary needs a healed reference path too.
+                    self.fallback_step_fn = fix["fallback_step_fn"]
+                report = fix.get("report") or {}
+                self.heals += 1
+                self.quarantined_regions += len(report.get("quarantined", []))
+                event["healed"] = True
+                event["report"] = report
+        self.integrity_events.append(event)
 
     # -- drift replanning ---------------------------------------------------
 
@@ -648,6 +857,12 @@ class Server:
         # a completed overlapped build swaps on this batch (parity probe)
         if self._shadow_build is not None:
             if self._shadow_build.is_alive():
+                timeout = d.build_timeout_batches
+                if (
+                    timeout is not None
+                    and self._batches_served - self._shadow_started >= timeout
+                ):
+                    self._abandon_shadow()
                 return  # keep serving on the old plan while it builds
             self._finish_shadow(payloads, out)
             return
@@ -670,12 +885,30 @@ class Server:
         # step_fn remains live; only after parity does the swap happen.
         if d.overlap:
             self._shadow_build = _ShadowBuild(d.replan, measured)
+            self._shadow_started = self._batches_served
             self._shadow_build.start()
             return
         build = _ShadowBuild(d.replan, measured)
         build.run()  # inline (synchronous) shadow build
         self._shadow_build = build
         self._finish_shadow(payloads, out)
+
+    def _abandon_shadow(self) -> None:
+        """Stop polling a wedged overlapped build: the (daemon) thread is
+        left to die on its own, the server frees itself to replan again
+        after the cooldown, and the incident is recorded."""
+        build = self._shadow_build
+        build.abandoned = True
+        self._shadow_build = None
+        self.replans_abandoned += 1
+        self.replan_events.append(
+            {
+                "batch": self._batches_served,
+                "drift": float(self.last_drift),
+                "parity_ok": False,
+                "abandoned": True,
+            }
+        )
 
     def _finish_shadow(self, payloads: list[Any], out: Any) -> None:
         """Join the shadow build and run the parity-gated atomic swap
@@ -698,6 +931,23 @@ class Server:
             )
             return
         shadow = build.step_fn
+        # integrity gate: a shadow whose freshly packed buffers already fail
+        # their own manifest must never cut over.
+        shadow_verify = getattr(shadow, "integrity_verify", None)
+        if shadow_verify is not None:
+            bad = shadow_verify()
+            if bad:
+                self.corruptions_detected += len(bad)
+                self.integrity_events.append(
+                    {"batch": self._batches_served, "reason": "hot-swap",
+                     "regions": [list(r) for r in bad], "healed": False}
+                )
+                self.replan_events.append(
+                    {"batch": self._batches_served,
+                     "drift": float(self.last_drift),
+                     "parity_ok": False, "integrity_ok": False}
+                )
+                return
         shadow_out = shadow(payloads)
         d = self.drift
         ok = _tree_allclose(out, shadow_out, d.parity_rtol, d.parity_atol)
@@ -761,10 +1011,18 @@ class Server:
         if self._shadow_build is not None:
             # end of traffic with a shadow still building: join it and run
             # the parity probe on the last served batch's (payloads, out) —
-            # the swap (and its event record) must not be lost.
+            # the swap (and its event record) must not be lost.  With a
+            # build timeout configured the join is bounded: a wedged build
+            # must not hang the drain forever.
             build = self._shadow_build
-            build.join()
-            if self._last_probe is not None:
+            bounded = (
+                self.drift is not None
+                and self.drift.build_timeout_batches is not None
+            )
+            build.join(timeout=5.0 if bounded else None)
+            if build.is_alive():
+                self._abandon_shadow()
+            elif self._last_probe is not None:
                 self._finish_shadow(*self._last_probe)
             else:
                 self._shadow_build = None
@@ -776,13 +1034,15 @@ class Server:
         s = self.tracker.summary()
         s["hedged_batches"] = self.hedges
         # request accounting — the identity submitted == served + shed +
-        # rejected + failed + pending is checked by tests/servebench.
+        # rejected + failed + invalid + pending is checked by
+        # tests/servebench/chaosbench.
         s["submitted"] = self.submitted
         s["served"] = self.served
         s["rejected"] = self.rejected
         s["shed"] = self.shed
         s["deadline_misses"] = self.deadline_misses
         s["failed"] = self.failed
+        s["invalid"] = self.invalid
         s["pending"] = len(self.batcher.queue)
         s["batch_failures"] = self.batch_failures
         s["degraded_batches"] = self.degraded_batches
@@ -796,6 +1056,25 @@ class Server:
             "deadline_s": self.deadline_s,
             "adaptive": self.batcher.adaptive,
         }
+        if self.validator is not None:
+            s["validation"] = {
+                "mode": getattr(self.validator, "mode", "custom"),
+                "oov_indices": self.oov_indices,
+                "negative_indices": self.negative_indices,
+                "invalid_queries": self.invalid,
+            }
+        if self.integrity_cfg is not None:
+            s["integrity"] = {
+                "check_every": self._integrity_every,
+                "nan_guard": self._nan_guard,
+                "checks": self.integrity_checks,
+                "corruptions_detected": self.corruptions_detected,
+                "heals": self.heals,
+                "heal_failures": self.heal_failures,
+                "quarantined_regions": self.quarantined_regions,
+                "poisoned_batches": self.poisoned_batches,
+                "events": list(self.integrity_events),
+            }
         if self.layout:
             s["layout"] = dict(self.layout)
         if self.cache:
@@ -806,6 +1085,7 @@ class Server:
                 "replans": self.replans,
                 "parity_failures": self.parity_failures,
                 "replan_errors": self.replan_errors,
+                "abandoned": self.replans_abandoned,
                 "drift_checks": self.drift_checks,
                 "last_drift": float(self.last_drift),
                 "threshold": self.drift.threshold,

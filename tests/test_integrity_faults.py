@@ -1,0 +1,340 @@
+"""Corruption detection, self-heal, and fault-injection tests (DESIGN.md §9).
+
+Three layers under test:
+
+* :class:`repro.core.integrity.IntegrityManifest` — per-region CRC32
+  detection and bit-exact repair of the packed buffers (quarantine when no
+  source data exists);
+* the server's integrity machinery — checksum cadence, NaN output guard,
+  heal-through-step-swap, and the hot-swap integrity gate on drift;
+* :class:`repro.serving.faults.FaultInjector` — seeded determinism and the
+  end-to-end containment of each injected fault class.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.data.distributions import Uniform, Zipf, sample_workload
+from repro.data.workloads import small_workload
+from repro.serving.faults import (
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    arm_buffer_corruption,
+)
+
+
+def _engine(tables=None, *, validation="clip", check_every=2, **overrides):
+    from repro.engine import EngineConfig, InferenceEngine
+
+    wl = small_workload("integ", batch=8)
+    kwargs = dict(
+        planner="asymmetric", use_kernels="xla", n_cores=1,
+        validation=validation, integrity="checksum",
+        integrity_options={"check_every": check_every, "nan_guard": True},
+        max_batch=8,
+    )
+    kwargs.update(overrides)
+    return InferenceEngine.build(None if tables is None else tables, wl,
+                                 EngineConfig(**kwargs)), wl
+
+
+def _drive(srv, wl, n_batches, dist=None, seed=0):
+    rng = np.random.default_rng(seed)
+    handles = []
+    for _ in range(n_batches):
+        idx = sample_workload(rng, wl, dist or Zipf(1.2), 8)
+        handles.extend(srv.submit_request(idx[:, q]) for q in range(8))
+        srv.pump()
+    srv.drain()
+    return handles
+
+
+# ------------------------------------------------------------ manifest
+
+
+def test_manifest_detects_and_repairs_bit_exact():
+    engine, wl = _engine()
+    pristine = np.array(engine.packed.chunk_data)
+    assert engine.verify_integrity() == []  # clean at pack time
+
+    chunk = np.array(engine.packed.chunk_data)
+    chunk[0, 1, 3] += 1.0  # silent corruption inside slot 0's region
+    import jax.numpy as jnp
+
+    engine.packed = dataclasses.replace(engine.packed, chunk_data=jnp.asarray(chunk))
+    bad = engine.verify_integrity()
+    assert bad and all(k[0] in ("chunk", "tail") for k in bad)
+
+    report = engine.heal()
+    assert report["clean"] and report["healed"] and not report["quarantined"]
+    assert np.array_equal(np.array(engine.packed.chunk_data), pristine)
+    assert engine.verify_integrity() == []
+
+
+def test_tail_region_covers_padding():
+    engine, wl = _engine()
+    chunk = np.array(engine.packed.chunk_data)
+    chunk[0, -1, 0] = 7.0  # the shared trailing zero row
+    import jax.numpy as jnp
+
+    engine.packed = dataclasses.replace(engine.packed, chunk_data=jnp.asarray(chunk))
+    bad = engine.verify_integrity()
+    assert ("tail", 0, -1) in bad
+    report = engine.heal()
+    assert report["clean"]
+    assert not np.array(engine.packed.chunk_data)[0, -1].any()
+
+
+def test_abstract_pack_quarantines_without_source():
+    """A corrupt region with no source tables is zeroed + quarantined, and
+    its checksum re-pinned so the next sweep doesn't re-flag it."""
+    from repro.core.integrity import IntegrityManifest
+    from repro.engine import EngineConfig, InferenceEngine
+
+    wl = small_workload("integ-abs", batch=8)
+    engine = InferenceEngine.build(
+        "abstract", wl,
+        EngineConfig(planner="asymmetric", use_kernels="xla", n_cores=1,
+                     integrity="checksum"),
+    )
+    manifest = engine.manifest
+    assert isinstance(manifest, IntegrityManifest)
+    chunk = np.array(engine.packed.chunk_data)
+    chunk[0, 0, 0] = 3.0
+    packed = dataclasses.replace(engine.packed, chunk_data=chunk)
+    assert manifest.verify(packed)
+    new_packed, report = manifest.repair(packed, engine.plan, wl.tables, None)
+    assert report["quarantined"] and report["clean"]
+    assert manifest.verify(new_packed) == []  # re-pinned, not re-flagged
+
+
+def test_cache_region_rebuilt_from_repaired_chunk():
+    """Cache rows are copies of buffer rows: a corrupt cache region heals
+    by rebuilding from the (repaired) chunk through cache_remap."""
+    from repro.core.tables import make_workload
+    from repro.engine import EngineConfig, InferenceEngine
+
+    # one oversized hot table + l1_bytes=0 so the carve is the only home
+    # for the measured hot rows (the test_dedup_cache carve recipe)
+    wl = make_workload("cachewl", [50_000, 32], dim=8, seqs=[1, 2], batch=32)
+    engine = InferenceEngine.build(
+        None, wl,
+        EngineConfig(
+            planner="asymmetric", use_kernels="fused", n_cores=1,
+            access="full", distribution="hotset:0.001:0.95",
+            hardware_options={"l1_bytes": 0, "dma_latency": 1e-8},
+            integrity="checksum",
+        ),
+    )
+    assert engine.packed.cache_rows > 0
+    pristine = np.array(engine.packed.cache_data)
+    cache = np.array(engine.packed.cache_data)
+    cache[0, 0, :] += 2.0
+    import jax.numpy as jnp
+
+    engine.packed = dataclasses.replace(engine.packed, cache_data=jnp.asarray(cache))
+    bad = engine.verify_integrity()
+    assert ("cache", 0, -1) in bad
+    report = engine.heal()
+    assert report["clean"]
+    assert np.array_equal(np.array(engine.packed.cache_data), pristine)
+
+
+# ------------------------------------------------------------ injector
+
+
+def test_injector_is_deterministic():
+    plan = FaultPlan([FaultSpec("query", at_batch=1, mode="oov", count=5)],
+                     seed=7)
+    wl = small_workload("det", batch=8)
+    rng = np.random.default_rng(3)
+    idx = sample_workload(rng, wl, Uniform(), 8)
+    rows = [t.rows for t in wl.tables]
+    a, na = FaultInjector(plan).poison_queries(1, idx, rows)
+    b, nb = FaultInjector(plan).poison_queries(1, idx, rows)
+    assert na == nb and np.array_equal(a, b)
+    assert not np.array_equal(a, idx)  # it actually poisoned something
+
+
+def test_injector_fires_once_per_spec():
+    inj = FaultInjector(FaultPlan([FaultSpec("step", at_batch=2)]))
+    inj.fire("step", batch=0)  # below at_batch: no-op
+    with pytest.raises(InjectedFault):
+        inj.fire("step", batch=2)
+    inj.fire("step", batch=3)  # already fired: no-op
+    assert len(inj.events) == 1
+
+
+def test_unknown_fault_point_rejected():
+    with pytest.raises(ValueError):
+        FaultSpec("gpu-on-fire")
+
+
+# ------------------------------------------------------------ server e2e
+
+
+def test_step_crash_contained_to_one_batch():
+    from repro.serving.server import BatchExecutionError
+
+    engine, wl = _engine()
+    # the step point fires with the post-increment batch counter, so
+    # at_batch=2 crashes the second batch (handles 8..15)
+    inj = FaultInjector(FaultPlan([FaultSpec("step", at_batch=2, mode="crash")]))
+    srv = engine.serve(max_wait_s=0.0, fault_injector=inj)
+    handles = _drive(srv, wl, 4)
+    s = srv.stats()
+    assert s["batch_failures"] == 1 and s["failed"] == 8
+    assert s["served"] == 3 * 8
+    with pytest.raises(BatchExecutionError):
+        handles[8].result()  # batch 1's handles
+    handles[0].result()      # batch 0 served before the crash
+
+
+def test_bitflip_detected_on_cadence_and_healed_bitwise():
+    engine, wl = _engine(check_every=2)
+    pristine = np.array(engine.packed.chunk_data)
+    inj = FaultInjector(
+        FaultPlan([FaultSpec("buffer", at_batch=2, mode="bitflip", count=3)])
+    )
+    srv = engine.serve(max_wait_s=0.0, fault_injector=inj)
+    arm_buffer_corruption(inj, engine, srv)
+    _drive(srv, wl, 8)
+    integ = srv.stats()["integrity"]
+    assert integ["corruptions_detected"] >= 1
+    assert integ["heals"] >= 1 and integ["heal_failures"] == 0
+    assert engine.verify_integrity() == []
+    assert np.array_equal(np.array(engine.packed.chunk_data), pristine)
+
+
+def test_nan_rows_trip_output_guard_and_heal():
+    from repro.serving.server import PoisonedOutputError
+
+    engine, wl = _engine(check_every=4)
+    inj = FaultInjector(
+        FaultPlan([FaultSpec("buffer", at_batch=1, mode="nan-rows", count=2)])
+    )
+    srv = engine.serve(max_wait_s=0.0, fault_injector=inj)
+    arm_buffer_corruption(inj, engine, srv)
+    handles = _drive(srv, wl, 8)
+    s = srv.stats()
+    integ = s["integrity"]
+    # NaN reached a served batch (guard) or the cadence caught it first —
+    # either way the corruption is detected and healed, and the failed
+    # batch (if any) is typed.
+    assert integ["corruptions_detected"] >= 1 or integ["poisoned_batches"] >= 1
+    assert integ["heals"] >= 1 and integ["heal_failures"] == 0
+    assert engine.verify_integrity() == []
+    if integ["poisoned_batches"]:
+        poisoned = [
+            h for h in handles
+            if h.done() and isinstance(h._error, PoisonedOutputError)
+        ]
+        assert len(poisoned) == 8 * integ["poisoned_batches"]
+    assert s["submitted"] == (
+        s["served"] + s["shed"] + s["rejected"] + s["failed"] + s["invalid"]
+        + s["pending"]
+    )
+
+
+def test_stuck_replan_abandoned_on_timeout():
+    engine, wl = _engine(
+        drift="replan",
+        drift_options={
+            "check_every": 2, "threshold": 0.0, "patience": 1,
+            "cooldown": 100, "overlap": True, "build_timeout_batches": 2,
+        },
+    )
+    inj = FaultInjector(FaultPlan([FaultSpec("replan", mode="stall")]))
+    srv = engine.serve(max_wait_s=0.0, fault_injector=inj)
+    _drive_no_drain(srv, wl, 10)
+    inj.release_stalls()
+    srv.drain()
+    rp = srv.stats()["replan"]
+    assert rp["abandoned"] >= 1
+    assert any(e.get("abandoned") for e in rp["events"])
+
+
+def _drive_no_drain(srv, wl, n_batches, seed=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(n_batches):
+        idx = sample_workload(rng, wl, Zipf(1.2), 8)
+        for q in range(8):
+            srv.submit(idx[:, q])
+        srv.pump()
+
+
+def test_hot_swap_rejects_corrupt_shadow():
+    """The drift swap's integrity gate: a shadow step whose buffers fail
+    verification is never swapped in (parity is not even consulted)."""
+    from repro.core.tables import TableSpec, Workload
+    from repro.data.distributions import workload_probs
+    from repro.serving.server import DriftConfig, Server
+
+    wl = Workload(
+        "swap-gate", (TableSpec("t0", rows=256, dim=4, seq=1),), batch=16
+    )
+    tables = [np.zeros((256, 4), np.float32)]
+
+    def step(payloads):
+        return [np.zeros(4, np.float32) for _ in payloads]
+
+    def corrupt_shadow(measured):
+        shadow = lambda payloads: [np.zeros(4, np.float32) for _ in payloads]
+        shadow.integrity_verify = lambda: [("chunk", 0, 0)]  # always dirty
+        return shadow
+
+    srv = Server(
+        step, max_batch=wl.batch, max_wait_s=0.0,
+        integrity={"check_every": 0, "nan_guard": False},
+        drift=DriftConfig(
+            baseline=workload_probs(wl, Uniform()),
+            extract_indices=lambda p: np.stack(p, axis=1),
+            replan=corrupt_shadow,
+            check_every=2, threshold=0.0, patience=1, cooldown=100,
+        ),
+    )
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        idx = sample_workload(rng, wl, Uniform(), wl.batch)
+        for q in range(wl.batch):
+            srv.submit(idx[:, q])
+        srv.pump()
+    srv.drain()
+    s = srv.stats()
+    assert s["replan"]["replans"] == 0
+    assert s["integrity"]["corruptions_detected"] >= 1
+    assert any(
+        e.get("reason") == "hot-swap" for e in s["integrity"]["events"]
+    )
+
+
+def test_oov_burst_end_to_end_reject():
+    from repro.serving.server import InvalidQueryError
+
+    engine, wl = _engine(validation="reject")
+    inj = FaultInjector(
+        FaultPlan([FaultSpec("query", at_batch=2, mode="oov", count=6)])
+    )
+    srv = engine.serve(max_wait_s=0.0, fault_injector=inj)
+    rows = [t.rows for t in wl.tables]
+    rng = np.random.default_rng(0)
+    handles, poisoned_total = [], 0
+    for b in range(5):
+        idx = sample_workload(rng, wl, Zipf(1.2), 8)
+        idx, n = inj.poison_queries(b, idx, rows)
+        poisoned_total += n
+        handles.extend(srv.submit_request(idx[:, q]) for q in range(8))
+        srv.pump()
+    srv.drain()
+    s = srv.stats()
+    assert poisoned_total >= 1
+    assert s["invalid"] == poisoned_total
+    assert s["served"] == s["submitted"] - poisoned_total
+    rejected = [
+        h for h in handles
+        if h.done() and isinstance(h._error, InvalidQueryError)
+    ]
+    assert len(rejected) == poisoned_total

@@ -131,6 +131,71 @@ def test_set_rejects_unknown_field():
         config_from_args(args)
 
 
+# ------------------------------------------------------------ preset packs
+
+
+def test_list_presets_names_the_curated_packs():
+    from repro.configs.presets import list_presets
+
+    names = list_presets()
+    assert {"taobao-zipf12", "tenrec-hotset", "huawei-dayparted"} <= set(names)
+
+
+@pytest.mark.parametrize("name", [
+    "taobao-zipf12", "tenrec-hotset", "huawei-dayparted",
+])
+def test_load_preset_validates_and_roundtrips(name):
+    from repro.configs.presets import load_preset
+
+    data = load_preset(name)
+    assert data["name"] == name
+    assert data["description"]
+    # the embedded config is a valid EngineConfig (load_preset validates,
+    # but the round-trip must also be loss-free)
+    cfg = EngineConfig.from_dict(data["config"])
+    assert cfg.to_dict() | data["config"] == cfg.to_dict()
+
+
+def test_load_preset_unknown_name_lists_alternatives():
+    from repro.configs.presets import load_preset
+
+    with pytest.raises(ValueError, match="taobao-zipf12"):
+        load_preset("nope")
+
+
+def test_preset_fills_config_workload_and_distribution():
+    cfg, dep = _resolve(["--preset", "tenrec-hotset"])
+    assert not dep
+    assert cfg.validation == "null-row" and cfg.integrity == "checksum"
+    assert cfg.access == "full" and cfg.admission == "shed-oldest"
+    # the preset also resolved the driver flags on the namespace
+    args = build_parser().parse_args(["--preset", "tenrec-hotset"])
+    config_from_args(args)
+    assert args.workload == "tenrec-qb"
+    assert args.distribution == "tenrec-qb"
+
+
+def test_explicit_flags_override_preset():
+    args = build_parser().parse_args(
+        ["--preset", "taobao-zipf12", "--workload", "smoke",
+         "--distribution", "uniform", "--set", "max_batch=64"]
+    )
+    cfg = config_from_args(args)
+    assert args.workload == "smoke" and args.distribution == "uniform"
+    assert cfg.max_batch == 64
+    assert cfg.drift == "replan"  # the rest of the pack survives
+
+
+def test_preset_and_config_are_mutually_exclusive(tmp_path):
+    path = tmp_path / "engine.json"
+    EngineConfig().save(path)
+    args = build_parser().parse_args(
+        ["--preset", "taobao-zipf12", "--config", str(path)]
+    )
+    with pytest.raises(SystemExit, match="mutually exclusive"):
+        config_from_args(args)
+
+
 def test_structural_validation_still_enforced():
     # the old `p.error("--dedup/--cache require ...")` checks now live in
     # EngineConfig.validate

@@ -3,7 +3,8 @@
 The Server is model-agnostic, so these tests drive it with pure-python step
 functions: what matters here is the runtime's robustness semantics —
 admission control, deadlines, fault containment, degraded mode, and the
-request-accounting identity (served + shed + rejected + failed == submitted).
+request-accounting identity (served + shed + rejected + failed + invalid ==
+submitted).
 """
 import numpy as np
 import pytest
@@ -38,9 +39,9 @@ class FakeClock:
 
 def _accounting_ok(srv) -> bool:
     s = srv.stats()
-    return (
-        s["submitted"]
-        == s["served"] + s["shed"] + s["rejected"] + s["failed"] + s["pending"]
+    return s["submitted"] == (
+        s["served"] + s["shed"] + s["rejected"] + s["failed"] + s["invalid"]
+        + s["pending"]
     )
 
 

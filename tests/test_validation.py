@@ -1,0 +1,220 @@
+"""Input-hardening tests (DESIGN.md §9): the validation policy registry,
+the three OOV/negative-index modes, and the server-side wiring.
+
+The hard guarantee under test: ``clip`` is today's behavior made explicit —
+bit-identical outputs on every execution path, it only *counts*.
+``null-row`` maps invalid ids onto the ``-1`` padding sentinel (exact zeros
+in every path); ``reject`` fails only the offending requests' handles with
+a typed :class:`InvalidQueryError` while the rest of the batch serves.
+"""
+import numpy as np
+import pytest
+
+from repro.data.distributions import Zipf, sample_workload
+from repro.data.workloads import small_workload
+from repro.serving.validation import (
+    VALIDATION_MODES,
+    IndexValidator,
+    payload_validator,
+)
+
+
+# ------------------------------------------------------------ IndexValidator
+
+
+def test_modes_registry_matches_engine():
+    from repro.engine import VALIDATION_POLICIES
+
+    assert set(VALIDATION_MODES) <= set(VALIDATION_POLICIES.names())
+
+
+def test_clip_is_pass_through():
+    v = IndexValidator([10, 20], "clip")
+    idx = np.array([[3, 99, -1], [-7, 19, 5]], np.int32)
+    out, counts = v.check(idx)
+    assert out is idx  # not even copied
+    assert counts == {"oov": 1, "negative": 1, "invalid": 2}
+
+
+def test_null_row_maps_invalid_to_padding_sentinel():
+    v = IndexValidator([10, 20], "null-row")
+    idx = np.array([[3, 99, -1], [-7, 19, 5]], np.int32)
+    out, counts = v.check(idx)
+    assert out.tolist() == [[3, -1, -1], [-1, 19, 5]]
+    assert out.dtype == idx.dtype
+    assert counts["invalid"] == 2
+    # the original is untouched
+    assert idx[0, 1] == 99
+
+
+def test_padding_sentinel_is_never_invalid():
+    v = IndexValidator([10], "reject")
+    out, counts = v.check(np.array([[-1, -1, 0]], np.int32))
+    assert counts == {"oov": 0, "negative": 0, "invalid": 0}
+    assert out.tolist() == [[-1, -1, 0]]
+
+
+def test_empty_batch_counts_zero():
+    v = IndexValidator([10, 20], "null-row")
+    out, counts = v.check(np.zeros((2, 0), np.int32))
+    assert out.shape == (2, 0)
+    assert counts == {"oov": 0, "negative": 0, "invalid": 0}
+
+
+def test_all_oov_batch():
+    v = IndexValidator([4], "null-row")
+    out, counts = v.check(np.array([[4, 5, 6, 7]], np.int32))
+    assert counts["oov"] == 4 and counts["invalid"] == 4
+    assert (out == -1).all()
+
+
+def test_table_count_mismatch_raises():
+    v = IndexValidator([10, 20], "clip")
+    with pytest.raises(ValueError):
+        v.check(np.zeros((3, 2), np.int32))
+
+
+def test_unknown_mode_raises():
+    with pytest.raises(ValueError):
+        IndexValidator([10], "bogus")
+
+
+# ------------------------------------------------------------ payload_validator
+
+
+def test_payload_validator_reject_flags_only_bad_positions():
+    validate = payload_validator([10, 20], "reject")
+    good = np.array([[1], [2]], np.int32)
+    bad = np.array([[99], [2]], np.int32)
+    out, counts, flagged = validate([good, bad, good])
+    assert list(flagged) == [1]
+    assert "out-of-vocab" in flagged[1] or "invalid" in flagged[1]
+    assert counts["oov"] == 1
+    # surviving payloads pass through unmodified
+    assert np.array_equal(out[0], good) and np.array_equal(out[2], good)
+
+
+def test_payload_validator_mapping_payloads():
+    validate = payload_validator([10], "null-row")
+    out, counts, flagged = validate([{"indices": np.array([[99]], np.int32)}])
+    assert counts["oov"] == 1 and not flagged
+    assert out[0]["indices"].tolist() == [[-1]]
+
+
+# ------------------------------------------------------------ server wiring
+
+
+def _traffic(wl, n_batches, batch, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        sample_workload(rng, wl, Zipf(1.2), batch) for _ in range(n_batches)
+    ]
+
+
+def _engine(validation, **overrides):
+    from repro.engine import EngineConfig, InferenceEngine
+
+    wl = small_workload("val", batch=8)
+    kwargs = dict(
+        planner="asymmetric", use_kernels="xla", n_cores=1,
+        validation=validation, max_batch=8,
+    )
+    kwargs.update(overrides)
+    return InferenceEngine.build(None, wl, EngineConfig(**kwargs)), wl
+
+
+def _drive(srv, wl, batches):
+    handles = []
+    for idx in batches:
+        handles.extend(
+            srv.submit_request(idx[:, q]) for q in range(idx.shape[1])
+        )
+        srv.pump()
+    srv.drain()
+    return handles
+
+
+def test_server_reject_fails_only_offending_handles():
+    from repro.serving.server import InvalidQueryError
+
+    engine, wl = _engine("reject")
+    srv = engine.serve(max_wait_s=0.0)
+    batches = _traffic(wl, 2, 8)
+    batches[1][0, 3, 0] = wl.tables[0].rows + 7  # poison one query
+    handles = _drive(srv, wl, batches)
+    s = srv.stats()
+    assert s["invalid"] == 1 and s["served"] == 15
+    assert s["validation"]["oov_indices"] == 1
+    with pytest.raises(InvalidQueryError):
+        handles[8 + 3].result()
+    for i, h in enumerate(handles):
+        if i != 11:
+            assert h.result().shape == (len(wl.tables), wl.tables[0].dim)
+    # identity including the invalid term
+    assert s["submitted"] == s["served"] + s["failed"] + s["invalid"]
+
+
+def test_server_null_row_serves_oov_as_zeros():
+    engine, wl = _engine("null-row")
+    srv = engine.serve(max_wait_s=0.0)
+    idx = _traffic(wl, 1, 8)[0]
+    idx[2, 5, 0] = -44  # negative (not the -1 sentinel)
+    handles = _drive(srv, wl, [idx])
+    s = srv.stats()
+    assert s["invalid"] == 0 and s["served"] == 8
+    assert s["validation"]["negative_indices"] == 1
+    # table 2 is seq-1: the nulled query's table-2 pooled row is exactly zero
+    out = np.asarray(handles[5].result())
+    assert not out[2].any()
+
+
+@pytest.mark.parametrize("use_kernels,reduce_mode", [
+    ("xla", "psum"),
+    ("xla", "sparse"),
+])
+def test_clip_bit_parity_against_no_validator(use_kernels, reduce_mode):
+    """clip-mode outputs are bitwise identical to a server with no
+    validator at all — on clean AND on OOV-poisoned traffic."""
+    engine, wl = _engine(
+        "clip", use_kernels=use_kernels, reduce_mode=reduce_mode
+    )
+    batches = _traffic(wl, 3, 8)
+    batches[1][4, 2, 0] = wl.tables[4].rows + 123  # OOV survives clip
+
+    def results(**kw):
+        srv = engine.serve(max_wait_s=0.0, **kw)
+        return [np.asarray(h.result()) for h in _drive(srv, wl, batches)]
+
+    a = results()
+    b = results(validator=None)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert x.dtype == y.dtype and np.array_equal(x, y)
+
+
+def test_server_stats_counters_accumulate():
+    engine, wl = _engine("clip")
+    srv = engine.serve(max_wait_s=0.0)
+    batches = _traffic(wl, 2, 8)
+    batches[0][0, 0, 0] = wl.tables[0].rows  # oov
+    batches[1][1, 1, 1] = -9                 # negative
+    _drive(srv, wl, batches)
+    v = srv.stats()["validation"]
+    assert v["mode"] == "clip"
+    assert v["oov_indices"] == 1 and v["negative_indices"] == 1
+    assert v["invalid_queries"] == 0  # clip never fails a request
+
+
+def test_idle_server_percentiles_are_none():
+    """Satellite regression: an idle server's latency summary used to emit
+    NaN percentiles; now both the tracker and stats() surface None."""
+    from repro.serving.latency import LatencyTracker
+    from repro.serving.server import Server
+
+    t = LatencyTracker()
+    assert t.p50 is None and t.p99 is None
+    assert t.summary()["p50_us"] is None
+
+    srv = Server(lambda p: list(p), max_batch=4, max_wait_s=0.0)
+    s = srv.stats()
+    assert s["p50_us"] is None and s["p99_us"] is None
