@@ -22,11 +22,17 @@
 #                       regenerating BENCH_serving.json in place
 #   make chaosbench   — seeded fault-injection matrix (fault class x
 #                       validation policy), regenerating BENCH_chaos.json
+#   make modelbench   — full scenario matrix (every model x distribution x
+#                       policy: modeled columns + bit-parity + served round
+#                       trip), regenerating BENCH_models.json; bench-check
+#                       regenerates its fast smoke candidate and gates it
+#                       against the committed baseline
 
 PY ?= python
 export PYTHONPATH := src
 
-.PHONY: test bench-check bench driftbench dedupbench servebench chaosbench tier1
+.PHONY: test bench-check bench driftbench dedupbench servebench chaosbench \
+	modelbench tier1
 
 test:
 	$(PY) -m pytest -x -q
@@ -49,5 +55,8 @@ servebench:
 
 chaosbench:
 	$(PY) benchmarks/chaosbench.py
+
+modelbench:
+	$(PY) benchmarks/modelbench.py
 
 tier1: test bench-check

@@ -64,6 +64,20 @@ the tolerance on any gated metric.  Two baselines are gated (see
   accounting identity, buffer faults healed, clip bit-parity).  The
   candidate regenerates in full (seeded faults, XLA path, ~7 s on CPU).
 
+``BENCH_models.json`` (modelbench scenario matrix), when committed:
+
+* **modeled lookup bytes / modeled P99** per model x distribution x policy
+  cell — deterministic cost-model outputs, gated at ``--bytes-tol``;
+* **reduction factors** for the dedup-cache cells — direction-flipped gate
+  (a shrink beyond tolerance fails);
+* **per-cell parity booleans** — a cell whose fused-vs-reference bitwise
+  parity was true in the committed baseline must stay true (checked only
+  when the candidate ran in full mode);
+* **invariants** — dedup-cache never inflates skewed traffic, zipf sheds
+  bytes on every model, the replanned P99 stays bounded, plus the parity
+  claims.  The candidate regenerates in fast smoke mode (``--no-measure``:
+  modeled matrix only, no jit), so parity invariants are skipped there.
+
 Wired into ``make bench-check`` (the tier-1 flow's companion target).
 """
 from __future__ import annotations
@@ -80,6 +94,7 @@ _DRIFT_BASELINE = _REPO_ROOT / "BENCH_drift.json"
 _DEDUP_BASELINE = _REPO_ROOT / "BENCH_dedup.json"
 _SERVING_BASELINE = _REPO_ROOT / "BENCH_serving.json"
 _CHAOS_BASELINE = _REPO_ROOT / "BENCH_chaos.json"
+_MODELS_BASELINE = _REPO_ROOT / "BENCH_models.json"
 
 _BYTES_KEYS = ("chunk_bytes",)
 _TRAFFIC_PATHS = ("fused", "xla_gather")
@@ -347,6 +362,67 @@ def compare_chaos(
     return failures
 
 
+# parity invariants only exist when modelbench ran in full (measured) mode;
+# the smoke-mode candidate the gate regenerates skips them.
+_MODELS_MEASURED_INVARIANTS = ("parity_all_cells", "served_parity")
+
+
+def _models_cells(record: dict) -> dict[str, dict]:
+    """modelbench record -> {``<model>.<dist>.<policy>``: cell}."""
+    return {
+        f"{c['model']}.{c['distribution']}.{c['policy']}": c
+        for c in record.get("cells", [])
+    }
+
+
+def compare_models(
+    baseline: dict, candidate: dict, *, tol: float = 0.20
+) -> list[str]:
+    """Scenario-matrix gate: modeled byte/P99 regressions per cell,
+    collapsed dedup reductions, flipped parity booleans, and flipped
+    record invariants."""
+    failures: list[str] = []
+    base, cand = _models_cells(baseline), _models_cells(candidate)
+    measured = "measured" in candidate
+    for name, b in sorted(base.items()):
+        c = cand.get(name)
+        if c is None:
+            failures.append(f"models.{name}: missing from candidate")
+            continue
+        for k in ("modeled_lookup_bytes", "modeled_p99_us"):
+            bv, cv = float(b.get(k, 0)), float(c.get(k, 0))
+            if bv > 0 and cv > bv * (1.0 + tol):
+                failures.append(
+                    f"models.{name}.{k}: {cv:.2f} vs baseline {bv:.2f} "
+                    f"(+{(cv / bv - 1) * 100:.1f}% > {tol * 100:.0f}% tol)"
+                )
+        if b.get("policy") == "dedup-cache":
+            bv = float(b.get("reduction_vs_baseline", 0))
+            cv = float(c.get("reduction_vs_baseline", 0))
+            if bv > 0 and cv < bv * (1.0 - tol):
+                failures.append(
+                    f"models.{name}.reduction_vs_baseline: {cv:.2f}x vs "
+                    f"baseline {bv:.2f}x "
+                    f"({(cv / bv - 1) * 100:.1f}% < -{tol * 100:.0f}% tol)"
+                )
+        if measured and b.get("parity_ok", False) and not c.get(
+            "parity_ok", False
+        ):
+            failures.append(
+                f"models.{name}.parity_ok: true in baseline, now false"
+            )
+    for k, v in baseline.get("invariants", {}).items():
+        if not v:
+            continue
+        if k in _MODELS_MEASURED_INVARIANTS and not measured:
+            continue  # candidate ran in fast smoke mode (modeled only)
+        if not candidate.get("invariants", {}).get(k, False):
+            failures.append(
+                f"models invariant {k!r}: true in baseline, now false"
+            )
+    return failures
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--baseline", type=Path, default=_BASELINE)
@@ -389,6 +465,14 @@ def main(argv=None) -> int:
     )
     p.add_argument("--skip-chaos", action="store_true",
                    help="skip the fault-containment bench gate")
+    p.add_argument("--baseline-models", type=Path, default=_MODELS_BASELINE)
+    p.add_argument(
+        "--candidate-models", type=Path, default=None,
+        help="modelbench JSON to check; omitted = regenerate in fast smoke "
+             "mode (modeled matrix only) when the baseline exists",
+    )
+    p.add_argument("--skip-models", action="store_true",
+                   help="skip the scenario-matrix bench gate")
     args = p.parse_args(argv)
 
     baseline = json.loads(args.baseline.read_text())
@@ -491,6 +575,29 @@ def main(argv=None) -> int:
                     f"[bench-check] chaos.{name}: detected={c['detected']} "
                     f"blast={c['blast_radius']:.4f} "
                     f"recovery={c['recovery_batches']}"
+                )
+
+    if not args.skip_models and args.baseline_models.exists():
+        models_base = json.loads(args.baseline_models.read_text())
+        if args.candidate_models is not None:
+            models_cand = json.loads(args.candidate_models.read_text())
+        else:
+            sys.path.insert(0, str(_REPO_ROOT))
+            from benchmarks.modelbench import run as models_run
+
+            tmp = Path(tempfile.mkstemp(suffix=".json")[1])
+            models_cand = models_run(measure=False, csv=False, out_path=tmp)
+            print(f"[bench-check] regenerated models candidate -> {tmp}")
+        failures += compare_models(models_base, models_cand, tol=args.bytes_tol)
+        mb, mc = _models_cells(models_base), _models_cells(models_cand)
+        for name in sorted(mb):
+            if name in mc:
+                bv = mb[name]["modeled_lookup_bytes"]
+                cv = mc[name]["modeled_lookup_bytes"]
+                delta = (cv / bv - 1) * 100 if bv > 0 else 0.0
+                print(
+                    f"[bench-check] models.{name}: bytes={cv:.0f} "
+                    f"({delta:+.1f}%) p99={mc[name]['modeled_p99_us']:.2f}us"
                 )
 
     if failures:

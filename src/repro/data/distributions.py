@@ -113,7 +113,15 @@ class RowProbs:
         order = np.lexsort((ids, -counts))
         ids, counts = ids[order], counts[order]
         tail = max(0.0, 1.0 - float(counts.sum()) / n)
-        return RowProbs(rows, ids, counts / n, tail)
+        probs = counts / n
+        if tail > 0.0 and len(ids) >= rows:
+            # every row is explicitly listed, so the leftover stream mass
+            # has no unseen rows to live on — spread it uniformly over the
+            # listed rows instead of silently dropping it (adding a
+            # constant keeps the descending prob order intact).
+            probs = probs + tail / rows
+            tail = 0.0
+        return RowProbs(rows, ids, probs, tail)
 
     # -- internals ----------------------------------------------------------
 

@@ -341,6 +341,12 @@ class EngineConfig:
     distribution for the initial plan.
     """
 
+    # scenario model (DESIGN.md §10): "pooled" = the raw embedding lookup;
+    # a repro.models.registry.SCENARIOS name serves that wrapper's tower on
+    # top of the engine's fused lookups (make_step/split come from the
+    # wrapper).  model_options are factory kwargs (batch=/seed=).
+    model: str = "pooled"
+    model_options: dict = dataclasses.field(default_factory=dict)
     # placement
     planner: str = "asymmetric"
     planner_options: dict = dataclasses.field(default_factory=dict)
@@ -440,6 +446,14 @@ class EngineConfig:
                 raise ValueError("access reduction requires layout='ragged'")
             if self.use_kernels != "fused":
                 raise ValueError("access reduction requires use_kernels='fused'")
+        if self.model != "pooled":
+            from repro.models.registry import SCENARIOS
+
+            if self.model not in SCENARIOS:
+                raise ValueError(
+                    f"unknown scenario model {self.model!r}; registered: "
+                    f"{sorted(SCENARIOS)} (or 'pooled')"
+                )
         if self.integrity != "none":
             check_every = self.integrity_options.get("check_every", 64)
             if not isinstance(check_every, int) or check_every < 0:
@@ -521,6 +535,7 @@ class InferenceEngine:
         table_data,
         cost_model,
         manifest=None,
+        scenario=None,
     ):
         self.config = config
         self.workload = workload
@@ -530,6 +545,7 @@ class InferenceEngine:
         self.freqs = freqs
         self.cost_model = cost_model
         self.manifest = manifest  # pack-time integrity checksums (or None)
+        self.scenario = scenario  # ScenarioModel wrapper (or None = pooled)
         self._table_data = table_data
         self._server = None
 
@@ -635,6 +651,63 @@ class InferenceEngine:
             manifest=manifest,
         )
 
+    @classmethod
+    def from_scenario(
+        cls,
+        scenario,
+        config: EngineConfig | None = None,
+        *,
+        mesh=None,
+        freqs=None,
+    ) -> "InferenceEngine":
+        """Build an engine over a :class:`~repro.models.scenarios.
+        ScenarioModel`: the wrapper's workload + extracted tables go through
+        the normal :meth:`build` pipeline, and the returned engine carries
+        the wrapper so :meth:`serve` runs its tower step (and drift
+        hot-swaps rebuild it) without extra wiring."""
+        import dataclasses as _dc
+
+        config = config if config is not None else EngineConfig()
+        name = getattr(scenario, "name", None)
+        if config.model == "pooled" and name is not None:
+            from repro.models.registry import SCENARIOS
+
+            if name in SCENARIOS:  # stamp the recipe into the artifact
+                config = _dc.replace(config, model=name)
+        engine = cls.build(
+            scenario.table_data(), scenario.workload, config,
+            mesh=mesh, freqs=freqs,
+        )
+        engine.scenario = scenario
+        return engine
+
+    @classmethod
+    def build_scenario(
+        cls,
+        name: str | None = None,
+        config: EngineConfig | None = None,
+        *,
+        mesh=None,
+        freqs=None,
+        **factory_kwargs,
+    ) -> "InferenceEngine":
+        """Resolve a registered scenario by name (default: ``config.model``)
+        and build it — the one-call path from a JSON config artifact with a
+        ``model`` field to a served scenario.  ``factory_kwargs`` override
+        ``config.model_options`` (``batch=``/``seed=``)."""
+        from repro.models.registry import get_scenario
+
+        config = config if config is not None else EngineConfig()
+        name = name or (config.model if config.model != "pooled" else None)
+        if name is None:
+            raise ValueError(
+                "build_scenario needs a scenario name (argument or "
+                "config.model)"
+            )
+        opts = {**config.model_options, **factory_kwargs}
+        scenario = get_scenario(name, **opts)
+        return cls.from_scenario(scenario, config, mesh=mesh, freqs=freqs)
+
     def reference_view(self) -> "InferenceEngine":
         """A shallow engine view over the SAME bag/packed tables whose
         executor knobs are forced to the XLA reference path
@@ -655,19 +728,24 @@ class InferenceEngine:
             table_data=self._table_data,
             cost_model=self.cost_model,
             manifest=self.manifest,
+            scenario=self.scenario,
         )
         return view
 
     def rebuild(self, freqs) -> "InferenceEngine":
         """Same config + tables, re-planned/re-packed under new histograms —
-        the shadow re-pack the drift policy runs off the hot path."""
-        return InferenceEngine.build(
+        the shadow re-pack the drift policy runs off the hot path.  The
+        scenario wrapper (tower params + step maker) carries over so a
+        hot-swap re-invokes the same model's ``make_step``."""
+        engine = InferenceEngine.build(
             self._table_data if self._table_data is not None else "abstract",
             self.workload,
             self.config,
             mesh=self.mesh,
             freqs=freqs,
         )
+        engine.scenario = self.scenario
+        return engine
 
     # -- data-plane integrity (DESIGN.md §9) --------------------------------
 
@@ -779,6 +857,12 @@ class InferenceEngine:
         """
         from repro.serving.server import Server
 
+        if make_step is None and self.scenario is not None:
+            # per-model step wiring: the scenario's tower over the fused
+            # lookups, re-invoked on every drift hot-swap / heal rebuild.
+            make_step = self.scenario.make_step
+            if split_fn is None:
+                split_fn = self.scenario.split
         maker = make_step or (lambda eng: eng._default_step())
 
         def _make_fallback(eng):
@@ -885,6 +969,7 @@ class InferenceEngine:
 
         plan = self.plan
         out = {
+            "model": self.config.model,
             "workload": self.workload.name,
             "n_cores": plan.n_cores,
             "planner": plan.meta.get("planner"),
@@ -909,6 +994,7 @@ class InferenceEngine:
         """Human-readable build report (what ``launch/serve.py`` prints)."""
         s = self.stats()
         lines = [
+            f"model {self.config.model}",
             f"workload {self.workload.summary()}",
             f"plan: {s['n_chunks']} chunks, {s['n_symmetric']} symmetric, "
             f"{s['n_cores']} cores, planner={s['planner']}, "

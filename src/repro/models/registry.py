@@ -1,9 +1,25 @@
-"""Architecture registry: ``--arch <id>`` -> config + step functions + specs."""
+"""Architecture + scenario registries.
+
+Two registries live here:
+
+* :data:`ARCH_MODULES` — ``--arch <id>`` -> LLM config + step functions +
+  specs (the transformer-family training/serving stacks);
+* :data:`SCENARIOS` — the scenario matrix (DESIGN.md §10): named
+  :class:`repro.models.scenarios.ScenarioModel` factories, each paired with
+  a ``default_config`` dict of :class:`repro.engine.EngineConfig` fields.
+  Every entry is built through ``InferenceEngine`` by the conformance
+  battery in ``tests/test_scenario_matrix.py`` and measured across the
+  distribution x policy matrix by ``benchmarks/modelbench.py``; the
+  ``default_config`` dicts are round-tripped through
+  ``EngineConfig.from_dict(...).validate()`` by the registry smoke test, so
+  an entry referencing an unknown/missing config field fails CI, not
+  review.
+"""
 from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -115,4 +131,91 @@ def build(arch: str, smoke: bool = False) -> Bundle:
     return Bundle(cfg)
 
 
-__all__ = ["ARCH_IDS", "ARCH_MODULES", "Bundle", "build", "get_config", "SHAPES"]
+# ==========================================================================
+# scenario matrix registry (DESIGN.md §10)
+# ==========================================================================
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioEntry:
+    """One registered scenario: a wrapper factory plus the EngineConfig
+    recipe the matrix serves it under by default.
+
+    ``factory(batch=, seed=)`` returns a conforming
+    :class:`repro.models.scenarios.ScenarioModel`; ``default_config`` holds
+    plain :class:`repro.engine.EngineConfig` field values (validated by the
+    registry smoke test — unknown fields fail there, not at build time).
+    """
+
+    name: str
+    factory: Callable[..., Any]
+    description: str
+    default_config: dict
+
+
+def _scenario_entries() -> dict[str, ScenarioEntry]:
+    from repro.models import scenarios as S
+
+    entries = [
+        ScenarioEntry(
+            "dlrm",
+            S.make_dlrm_scenario,
+            "paper DLRM: bottom MLP + pairwise interaction + top MLP",
+            {"planner": "asymmetric", "access": "full",
+             "distribution": "zipf:1.2"},
+        ),
+        ScenarioEntry(
+            "moe",
+            S.make_moe_scenario,
+            "top-k routed MoE tower over the feature tokens",
+            {"planner": "asymmetric", "access": "full",
+             "distribution": "zipf:1.2"},
+        ),
+        ScenarioEntry(
+            "mamba2",
+            S.make_mamba2_scenario,
+            "SSD state-space tower over the embedded feature sequence",
+            {"planner": "asymmetric", "access": "dedup",
+             "distribution": "hotset:0.02:0.9"},
+        ),
+        ScenarioEntry(
+            "transformer",
+            S.make_transformer_scenario,
+            "pre-norm self-attention + SwiGLU block over feature tokens",
+            {"planner": "asymmetric", "access": "none", "tuning": "none"},
+        ),
+    ]
+    return {e.name: e for e in entries}
+
+
+SCENARIOS: dict[str, ScenarioEntry] = _scenario_entries()
+
+
+def list_scenarios() -> list[str]:
+    return sorted(SCENARIOS)
+
+
+def get_scenario(name: str, *, batch: int | None = None, seed: int = 0):
+    """Instantiate a registered scenario wrapper (its default workload)."""
+    if name not in SCENARIOS:
+        raise ValueError(
+            f"unknown scenario {name!r}; registered: {list_scenarios()}"
+        )
+    kwargs: dict[str, Any] = {"seed": seed}
+    if batch is not None:
+        kwargs["batch"] = batch
+    return SCENARIOS[name].factory(**kwargs)
+
+
+__all__ = [
+    "ARCH_IDS",
+    "ARCH_MODULES",
+    "Bundle",
+    "SCENARIOS",
+    "ScenarioEntry",
+    "build",
+    "get_config",
+    "get_scenario",
+    "list_scenarios",
+    "SHAPES",
+]

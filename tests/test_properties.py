@@ -1,0 +1,167 @@
+"""Property-based tests: RowProbs mass invariants + ``_dedup_indices``.
+
+Runs under real hypothesis when installed (CI installs it); on clean local
+environments the ``_hypothesis_compat`` shim turns each property into a
+skip placeholder so the module still collects.
+
+The two subjects are the exactness contracts the whole data plane leans
+on:
+
+* :class:`repro.data.distributions.RowProbs` — every mass query
+  (prefix/range/top/expected-unique) must behave like a probability
+  measure: bounded by 1, additive over disjoint ranges, monotone in the
+  range, consistent with the explicit-ids + uniform-tail decomposition;
+* :func:`repro.kernels.embedding_multi._dedup_indices` — dedup followed by
+  the count-scatter must be the identity on lookup multisets for *any*
+  index tensor (including ``-1`` sentinel padding) and *any* unique cap:
+  every non-negative lookup lands in exactly one of ``cnt``/``spill``.
+"""
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.data.distributions import RowProbs
+from repro.kernels.embedding_multi import _dedup_indices
+
+# -----------------------------------------------------------------------
+# RowProbs mass invariants
+# -----------------------------------------------------------------------
+
+
+def _row_probs(rows: int, seed: int, top_k: int) -> RowProbs:
+    rng = np.random.default_rng(seed)
+    k = min(top_k, rows)
+    ids = rng.choice(rows, size=k, replace=False).astype(np.int64)
+    counts = rng.integers(1, 50, size=k).astype(np.float64)
+    # a non-trivial uniform tail: counts cover part of a longer stream
+    total = float(counts.sum()) * float(rng.uniform(1.0, 2.0))
+    return RowProbs.from_counts(ids, counts, rows, total=total)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    top_k=st.integers(min_value=0, max_value=16),
+)
+def test_rowprobs_total_mass_and_bounds(rows, seed, top_k):
+    rp = _row_probs(rows, seed, top_k)
+    assert abs(rp.range_mass(0, rows) - 1.0) < 1e-6
+    assert abs(rp.prefix_mass(rows) - 1.0) < 1e-6
+    assert abs(rp.mass_of_ids(np.arange(rows)) - 1.0) < 1e-6
+    assert rp.top_mass(rows) <= 1.0 + 1e-9
+    assert rp.l1_distance(rp) < 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.integers(min_value=2, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    top_k=st.integers(min_value=0, max_value=16),
+    cut=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_rowprobs_range_mass_additive(rows, seed, top_k, cut):
+    """Disjoint ranges partition the mass: [0,m) + [m,rows) == 1."""
+    rp = _row_probs(rows, seed, top_k)
+    m = int(cut * rows)
+    assert abs(rp.range_mass(0, m) + rp.range_mass(m, rows) - 1.0) < 1e-6
+    # monotone in the range
+    assert rp.range_mass(0, m) <= rp.range_mass(0, rows) + 1e-9
+    # empty and out-of-bounds ranges carry no mass
+    assert rp.range_mass(m, m) == 0.0
+    assert rp.range_mass(rows, rows + 10) == 0.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    top_k=st.integers(min_value=0, max_value=16),
+    n=st.integers(min_value=0, max_value=512),
+)
+def test_rowprobs_expected_unique_bounds(rows, seed, top_k, n):
+    """E[unique] <= min(n, range width) and <= n * range mass + eps; more
+    lookups never reduce the expected unique count."""
+    rp = _row_probs(rows, seed, top_k)
+    e = rp.expected_unique(0, rows, n)
+    assert 0.0 <= e <= min(float(n), float(rows)) + 1e-9
+    assert e <= rp.expected_unique(0, rows, n + 1) + 1e-9
+    # skipping cached hot rows can only shrink the residual unique count
+    assert rp.expected_unique(0, rows, n, skip_top=4) <= e + 1e-9
+
+
+# -----------------------------------------------------------------------
+# _dedup_indices: dedup ∘ scatter == identity on lookup multisets
+# -----------------------------------------------------------------------
+
+
+def _multiset(vals) -> dict:
+    out: dict = {}
+    for v in vals:
+        out[int(v)] = out.get(int(v), 0) + 1
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    slots=st.integers(min_value=1, max_value=3),
+    batch=st.integers(min_value=1, max_value=5),
+    seq=st.integers(min_value=1, max_value=4),
+    rows=st.integers(min_value=1, max_value=12),
+    cap=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    pad_frac=st.floats(min_value=0.0, max_value=0.9),
+)
+def test_dedup_scatter_identity(slots, batch, seq, rows, cap, seed, pad_frac):
+    """For arbitrary (S,B,s) index tensors with -1 sentinel padding and any
+    unique_cap: every non-negative lookup is reconstructed exactly once
+    from uniq x cnt plus the spill stream; padding never leaks in."""
+    rng = np.random.default_rng(seed)
+    lidx = rng.integers(0, rows, size=(slots, batch, seq)).astype(np.int32)
+    lidx[rng.random(lidx.shape) < pad_frac] = -1
+
+    uniq, cnt, spill = (
+        np.asarray(a) for a in _dedup_indices(np.asarray(lidx), cap)
+    )
+    assert uniq.shape == (slots, cap)
+    assert cnt.shape == (slots, batch, cap)
+    assert spill.shape == (slots, batch, seq)
+
+    for s in range(slots):
+        live = uniq[s][uniq[s] >= 0]
+        assert len(live) == len(set(live.tolist())), "duplicate unique ids"
+        # counts only land on live unique entries
+        assert np.all(cnt[s][:, uniq[s] < 0] == 0)
+        for b in range(batch):
+            want = _multiset(lidx[s, b][lidx[s, b] >= 0])
+            got: dict = {}
+            for u in range(uniq.shape[1]):
+                if uniq[s, u] >= 0 and cnt[s, b, u] > 0:
+                    got[int(uniq[s, u])] = got.get(int(uniq[s, u]), 0) + int(
+                        cnt[s, b, u]
+                    )
+            for v in spill[s, b][spill[s, b] >= 0]:
+                got[int(v)] = got.get(int(v), 0) + 1
+            assert got == want, f"slot {s} row {b}: {got} != {want}"
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    cap=st.integers(min_value=1, max_value=16),
+)
+def test_dedup_all_padding_and_cap_overflow(seed, cap):
+    """All-padding slots produce empty unique sets and zero counts; a cap
+    of 1 pushes everything beyond the first unique id into the spill."""
+    rng = np.random.default_rng(seed)
+    pad = np.full((2, 3, 4), -1, np.int32)
+    uniq, cnt, spill = (np.asarray(a) for a in _dedup_indices(pad, cap))
+    assert np.all(uniq == -1) and np.all(cnt == 0) and np.all(spill == -1)
+
+    lidx = rng.integers(0, 100, size=(1, 2, 6)).astype(np.int32)
+    uniq1, cnt1, spill1 = (
+        np.asarray(a) for a in _dedup_indices(lidx, 1)
+    )
+    # exactly one unique id survives; everything else spills verbatim
+    total = int(cnt1.sum()) + int((spill1 >= 0).sum())
+    assert total == lidx.size
+    assert uniq1[0, 0] == lidx.min() or uniq1[0, 0] in lidx

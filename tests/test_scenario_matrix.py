@@ -1,0 +1,171 @@
+"""Scenario-matrix conformance battery (DESIGN.md §10).
+
+One parametrized battery over every entry in
+``repro.models.registry.SCENARIOS``: a registered model that stops
+satisfying the wrapper protocol, loses bit-parity against its reference
+forward, or breaks under a drift hot-swap fails here — in CI, not in
+review.  The registry smoke tests at the bottom validate the config side:
+every ``default_config`` must round-trip through
+``EngineConfig.from_dict(...).validate()``, and every ``ARCH_MODULES``
+entry must still export CONFIG/SMOKE.
+"""
+import dataclasses
+import importlib
+
+import numpy as np
+import pytest
+
+from repro.data.distributions import Zipf, get_distribution, workload_probs
+from repro.engine import EngineConfig, InferenceEngine
+from repro.models.registry import (
+    ARCH_MODULES,
+    SCENARIOS,
+    get_scenario,
+    list_scenarios,
+)
+from repro.models.scenarios import ScenarioModel
+
+BATCH = 16
+
+
+@pytest.fixture(scope="module", params=sorted(SCENARIOS))
+def cell(request):
+    """One (scenario, engine) pair per registered model, built through the
+    entry's own default_config — shared across the battery so each tower
+    compiles once."""
+    name = request.param
+    scenario = get_scenario(name, batch=BATCH)
+    cfg = EngineConfig.from_dict(
+        {**SCENARIOS[name].default_config, "n_cores": 1}
+    )
+    engine = InferenceEngine.from_scenario(scenario, cfg)
+    return scenario, engine
+
+
+def test_protocol_conformance(cell):
+    scenario, _ = cell
+    assert isinstance(scenario, ScenarioModel)
+    assert scenario.name in SCENARIOS
+    assert scenario.workload.batch == BATCH
+
+
+def test_table_extraction_matches_workload(cell):
+    scenario, _ = cell
+    tables = scenario.table_data()
+    specs = scenario.workload.tables
+    assert len(tables) == len(specs)
+    for arr, spec in zip(tables, specs):
+        assert arr.shape == (spec.rows, spec.dim)
+
+
+def test_config_stamps_model_name(cell):
+    scenario, engine = cell
+    assert engine.config.model == scenario.name
+    assert engine.stats()["model"] == scenario.name
+    assert f"model {scenario.name}" in engine.plan_report()
+
+
+def test_step_parity_bitwise(cell):
+    """Fused engine step == dense reference forward, bit for bit: all
+    scenario tables are seq=1, so the one-hot fused path is exact."""
+    scenario, engine = cell
+    rng = np.random.default_rng(0)
+    batch = scenario.sample_batch(rng, Zipf(1.2))
+    step = scenario.make_step(engine)
+    got = np.asarray(step(scenario.payloads(batch)))
+    want = scenario.reference_forward(batch)
+    assert got.shape == (BATCH,)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_rebuild_after_drift_hot_swap(cell):
+    """The drift policy's shadow re-pack: rebuild under skewed histograms,
+    re-invoke make_step on the rebuilt engine, keep bit-parity."""
+    scenario, engine = cell
+    freqs = workload_probs(scenario.workload, Zipf(1.2))
+    rebuilt = engine.rebuild(freqs)
+    assert rebuilt.scenario is scenario
+    rng = np.random.default_rng(1)
+    batch = scenario.sample_batch(rng, Zipf(1.2))
+    got = np.asarray(scenario.make_step(rebuilt)(scenario.payloads(batch)))
+    np.testing.assert_array_equal(got, scenario.reference_forward(batch))
+
+
+def test_served_roundtrip(cell):
+    """Request-level parity through engine.serve + submit_request using the
+    scenario's default make_step/split wiring (no explicit step passed)."""
+    scenario, engine = cell
+    srv = engine.serve(max_batch=8, max_wait_s=0.0)
+    rng = np.random.default_rng(2)
+    batch = scenario.sample_batch(rng, Zipf(1.2), batch=8)
+    handles = [srv.submit_request(p) for p in scenario.payloads(batch)]
+    srv.pump(force=True)
+    got = np.asarray([h.result() for h in handles])
+    np.testing.assert_array_equal(got, scenario.reference_forward(batch))
+
+
+def test_distribution_sampling_in_range(cell):
+    scenario, _ = cell
+    rng = np.random.default_rng(3)
+    for spec in ("uniform", "zipf:1.2", "hotset:0.02:0.9"):
+        idx = np.asarray(
+            scenario.sample_batch(rng, get_distribution(spec))["indices"]
+        )
+        assert idx.shape[:2] == (len(scenario.workload.tables), BATCH)
+        for i, t in enumerate(scenario.workload.tables):
+            valid = idx[i][idx[i] >= 0]
+            assert valid.size and valid.max() < t.rows
+
+
+# -----------------------------------------------------------------------
+# registry smoke: configs validate, arch modules import
+# -----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_default_config_validates(name):
+    """Every registered default_config is a valid EngineConfig recipe —
+    unknown or renamed fields fail here, not at build time."""
+    entry = SCENARIOS[name]
+    cfg = EngineConfig.from_dict({**entry.default_config, "model": name})
+    cfg.validate()
+    assert cfg.model == name
+
+
+def test_unknown_config_field_rejected():
+    entry = next(iter(SCENARIOS.values()))
+    with pytest.raises((TypeError, ValueError)):
+        EngineConfig.from_dict(
+            {**entry.default_config, "not_a_field": 1}
+        )
+
+
+def test_unknown_model_name_rejected():
+    with pytest.raises(ValueError, match="unknown"):
+        EngineConfig(model="nope").validate()
+    with pytest.raises(ValueError, match="nope"):
+        get_scenario("nope")
+
+
+def test_list_scenarios_sorted_and_complete():
+    assert list_scenarios() == sorted(SCENARIOS)
+    assert set(list_scenarios()) == {"dlrm", "moe", "mamba2", "transformer"}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCH_MODULES))
+def test_arch_registry_configs_importable(arch):
+    """Every --arch entry's module exports CONFIG and SMOKE ArchConfigs
+    with coherent shapes (a renamed module or field fails here)."""
+    mod = importlib.import_module(ARCH_MODULES[arch])
+    for cfg in (mod.CONFIG, mod.SMOKE):
+        assert dataclasses.is_dataclass(cfg)
+        assert cfg.d_model > 0 and cfg.n_layers > 0 and cfg.vocab > 0
+
+
+def test_build_scenario_by_name():
+    eng = InferenceEngine.build_scenario(
+        "transformer", EngineConfig(n_cores=1), batch=8
+    )
+    assert eng.config.model == "transformer"
+    assert eng.scenario is not None
+    assert eng.scenario.workload.batch == 8
