@@ -17,7 +17,14 @@ the tolerance on any gated metric.  Two baselines are gated (see
   wall clocks are rank-only and load-noisy, so on CPU they only catch
   catastrophic regressions while the byte/traffic columns carry the hard
   gate.  Wall is compared only when both sides ran the same backend +
-  compile mode.
+  compile mode;
+* **kernel-path crossover** (the record's ``"crossover"`` section, DESIGN.md
+  §11) — modeled dense-vs-sparse gather cost/bytes per (rows, batch) cell,
+  gated at ``--bytes-tol``; the modeled winner per cell must not move; and
+  the invariants (bitwise sparse-vs-one-hot parity on every cell, sparse
+  wins past the modeled crossover, one-hot below it, ``kernel_path=auto``
+  never worse than the better forced path in modeled cost) must stay true.
+  Crossover walls are informational only.
 
 ``BENCH_drift.json`` (driftbench scenario matrix), when committed:
 
@@ -158,6 +165,54 @@ def compare(
             failures.append(
                 f"{name}: {c:.0f} vs baseline {b:.0f} "
                 f"(+{(c / b - 1) * 100:.1f}% > {tol * 100:.0f}% tol)"
+            )
+    return failures
+
+
+_CROSSOVER_MODEL_KEYS = (
+    "onehot_model_us", "sparse_model_us",
+    "onehot_model_bytes", "sparse_model_bytes",
+)
+
+
+def compare_crossover(
+    baseline: dict, candidate: dict, *, tol: float = 0.20
+) -> list[str]:
+    """Kernel-path crossover gate (the ``"crossover"`` section of the layout
+    bench): modeled gather cost/bytes per (rows, batch) x path cell are
+    deterministic and gated at ``tol``; the modeled winner per cell must not
+    move; invariants (bitwise parity everywhere, sparse wins past the
+    crossover, one-hot below it, auto never worse than the better forced
+    path in modeled cost) are true-stays-true.  Walls are never gated."""
+    failures: list[str] = []
+    base = baseline.get("crossover")
+    if not base:
+        return failures
+    cand = candidate.get("crossover") or {}
+    b_cells = {(c["rows"], c["batch"]): c for c in base.get("cells", [])}
+    c_cells = {(c["rows"], c["batch"]): c for c in cand.get("cells", [])}
+    for key, b in sorted(b_cells.items()):
+        name = f"crossover.{key[0]}x{key[1]}"
+        c = c_cells.get(key)
+        if c is None:
+            failures.append(f"{name}: missing from candidate")
+            continue
+        for k in _CROSSOVER_MODEL_KEYS:
+            bv, cv = float(b.get(k, 0)), float(c.get(k, 0))
+            if bv > 0 and cv > bv * (1.0 + tol):
+                failures.append(
+                    f"{name}.{k}: {cv:.2f} vs baseline {bv:.2f} "
+                    f"(+{(cv / bv - 1) * 100:.1f}% > {tol * 100:.0f}% tol)"
+                )
+        if b.get("modeled_winner") != c.get("modeled_winner"):
+            failures.append(
+                f"{name}.modeled_winner: {c.get('modeled_winner')!r} vs "
+                f"baseline {b.get('modeled_winner')!r}"
+            )
+    for k, v in base.get("invariants", {}).items():
+        if v and not cand.get("invariants", {}).get(k, False):
+            failures.append(
+                f"crossover invariant {k!r}: true in baseline, now false"
             )
     return failures
 
@@ -496,6 +551,15 @@ def main(argv=None) -> int:
         if name in cand and base[name] > 0:
             delta = (cand[name] / base[name] - 1) * 100
             print(f"[bench-check] {name}: {cand[name]:.0f} ({delta:+.1f}%)")
+
+    failures += compare_crossover(baseline, candidate, tol=args.bytes_tol)
+    for c in (candidate.get("crossover") or {}).get("cells", []):
+        print(
+            f"[bench-check] crossover.{c['rows']}x{c['batch']}: "
+            f"winner={c['modeled_winner']} parity={c['parity_ok']} "
+            f"model_onehot={c['onehot_model_us']:.2f}us "
+            f"model_sparse={c['sparse_model_us']:.2f}us"
+        )
 
     if not args.skip_drift and args.baseline_drift.exists():
         drift_base = json.loads(args.baseline_drift.read_text())

@@ -14,6 +14,16 @@ buffer window once per core, the retired per-slot scan paid O(S·R_max·E).
 Zipf-skewed 1-big+31-small workload (DESIGN.md §3–§4): pack bytes, padding
 fraction, modeled traffic, autotuned block sizes, and executor wall time for
 both layouts, written to ``BENCH_embedding_layout.json``.
+
+``crossover_sweep`` is the dense-vs-sparse kernel-path matrix (DESIGN.md
+§11): forced one-hot vs forced true-sparse packs over a (rows, batch) grid,
+recording modeled gather cost/bytes (the deterministic gated columns — the
+crossover story is a chunk-width-vs-unique-count tradeoff, which interpret
+wall can't see), bitwise parity between the two packs, and the interpret
+walls (informational).  A dedup-armed plan over the zipf-skew workload adds
+the plan-level claim: ``kernel_path=auto``'s modeled cost never exceeds the
+better of the two forced paths.  Written into the same
+``BENCH_embedding_layout.json`` under ``"crossover"``.
 """
 from __future__ import annotations
 
@@ -75,6 +85,150 @@ def zipf_skewed_workload(big_rows: int = 50_000, n_small: int = 31, batch: int =
     rng = np.random.default_rng(0)
     rows = [big_rows] + [int(x) for x in rng.integers(16, 256, n_small)]
     return make_workload("zipf-skew", rows, dim=16, batch=batch, zipf_alpha=1.2)
+
+
+def crossover_sweep(csv: bool = True) -> dict:
+    """Dense-vs-sparse kernel-path crossover matrix (DESIGN.md §11).
+
+    One single-chunk GM plan per (rows, batch) cell, packed twice —
+    ``kernel_path="onehot"`` and ``"sparse"`` with the same dedup width —
+    and executed on the chunk's core.  Gated columns are the modeled gather
+    seconds/bytes per path and the modeled winner (deterministic closed
+    forms); parity is bitwise np.array_equal between the two packs.
+    Interpret walls ride along unlabeled as performance claims — on CPU the
+    one-hot GEMM hits BLAS while the sparse gather serializes, so only a
+    TPU backend makes the wall column meaningful.
+    """
+    from repro.core.partition import _fused_asym_lookup, pack_plan
+    from repro.core.strategies import ChunkAssignment, Plan
+    from repro.core.traffic import modeled_kernel_path_traffic
+    from repro.data.distributions import Zipf, workload_probs
+    from repro.core.planner import plan_asymmetric
+
+    model = analytic_model()
+    block_r = 512
+    interp = jax.default_backend() != "tpu"
+    cells = []
+    for rows in (1024, 32_768):
+        for batch in (64, 512):
+            wl = make_workload(
+                f"xover-{rows}x{batch}", [rows], dim=16, seqs=[4], batch=batch
+            )
+            table = wl.tables[0]
+            plan = Plan(
+                workload_name=wl.name, n_cores=1,
+                assignments=(ChunkAssignment(0, 0, 0, rows, Strategy.GM),),
+                symmetric_tables=(), symmetric_strategies=(),
+            )
+            plan.validate(wl.tables)
+            costs = model.kernel_path_costs(
+                table, batch, 1, block_r=block_r
+            )
+            # dedup width from the modeled uniques (planner sizing rule),
+            # bounded so the interpret-mode gather loop stays CPU-quick;
+            # the overflow spills identically on both paths.
+            cap = int(min(1.25 * costs["unique"] + 8, batch * 4, rows, 768))
+            cap = -(-cap // 8) * 8
+            params = [
+                jax.random.normal(
+                    jax.random.PRNGKey(rows + batch), (rows, 16), jnp.float32
+                )
+            ]
+            idx = jnp.asarray(
+                np.random.default_rng(rows ^ batch).integers(
+                    0, rows, (1, batch, 4)
+                ),
+                jnp.int32,
+            )
+            outs, walls = {}, {}
+            for kp in ("onehot", "sparse"):
+                packed = pack_plan(
+                    plan, wl.tables, params, block_r=block_r,
+                    unique_cap=cap, kernel_path=kp,
+                )
+                local = packed.strip_core(0)
+                fn = jax.jit(
+                    lambda p, i: _fused_asym_lookup(p, i, n_tables=1)
+                )
+                walls[kp] = _time(fn, local, idx, iters=2)
+                outs[kp] = np.asarray(fn(local, idx))
+            parity = bool(np.array_equal(outs["onehot"], outs["sparse"]))
+            winner = "sparse" if costs["sparse"] < costs["onehot"] else "onehot"
+            cell = {
+                "rows": rows,
+                "batch": batch,
+                "unique_cap": cap,
+                "modeled_unique": costs["unique"],
+                "onehot_model_us": costs["onehot"] * 1e6,
+                "sparse_model_us": costs["sparse"] * 1e6,
+                "onehot_model_bytes": costs["onehot_bytes"],
+                "sparse_model_bytes": costs["sparse_bytes"],
+                "modeled_winner": winner,
+                f"onehot{'_interpret' if interp else ''}_wall_us": walls["onehot"],
+                f"sparse{'_interpret' if interp else ''}_wall_us": walls["sparse"],
+                "parity_ok": parity,
+            }
+            cells.append(cell)
+            if csv:
+                print(
+                    f"kernelbench,crossover,rows={rows},batch={batch},"
+                    f"u={costs['unique']:.0f},"
+                    f"model_onehot={cell['onehot_model_us']:.2f}us,"
+                    f"model_sparse={cell['sparse_model_us']:.2f}us,"
+                    f"winner={winner},parity={parity}"
+                )
+
+    # plan-level auto-never-worse on the paper's pathological shape
+    wl = zipf_skewed_workload()
+    freqs = workload_probs(wl, Zipf(1.2))
+    plan = plan_asymmetric(
+        wl, jax.device_count(), model, freqs=freqs, dedup=True,
+        lif_threshold=1e9, rock_theta=None,
+    )
+    tr = modeled_kernel_path_traffic(plan, wl.tables, wl.batch, freqs)
+    workload_rec = {
+        "workload": "zipf-skew-1big-31small",
+        "n_sparse": tr["n_sparse"],
+        "n_onehot": tr["n_onehot"],
+        "onehot_us": tr["onehot_us"],
+        "sparse_us": tr["sparse_us"],
+        "auto_us": tr["auto_us"],
+        "onehot_bytes": tr["onehot_bytes"],
+        "sparse_bytes": tr["sparse_bytes"],
+        "auto_bytes": tr["auto_bytes"],
+        "auto_never_worse": tr["auto_never_worse"],
+    }
+    big = [c for c in cells if c["rows"] >= 32_768]
+    small = [c for c in cells if c["rows"] < 32_768]
+    record = {
+        "backend": jax.default_backend(),
+        "compiled": not interp,
+        "block_r": block_r,
+        "cells": cells,
+        "workload": workload_rec,
+        "invariants": {
+            "parity_ok": all(c["parity_ok"] for c in cells),
+            "sparse_wins_past_crossover": bool(big) and all(
+                c["modeled_winner"] == "sparse" for c in big
+            ),
+            "onehot_wins_below_crossover": bool(small) and all(
+                c["modeled_winner"] == "onehot" for c in small
+            ),
+            "both_paths_chosen": {
+                c["modeled_winner"] for c in cells
+            } == {"onehot", "sparse"},
+            "auto_never_worse": bool(tr["auto_never_worse"]),
+        },
+    }
+    if csv:
+        print(
+            f"kernelbench,crossover_auto,"
+            f"sparse_chunks={tr['n_sparse']},onehot_chunks={tr['n_onehot']},"
+            f"auto={tr['auto_us']:.2f}us,"
+            f"best_forced={min(tr['onehot_us'], tr['sparse_us']):.2f}us,"
+            f"never_worse={tr['auto_never_worse']}"
+        )
+    return record
 
 
 def layout_scenario(csv: bool = True, out_path: Path | None = None) -> dict:
@@ -165,6 +319,7 @@ def layout_scenario(csv: bool = True, out_path: Path | None = None) -> dict:
             f"vs_dense={record['modeled_fused_traffic_shrink_vs_dense']:.2f}x,"
             f"vs_scan={record['modeled_fused_traffic_shrink_vs_scan']:.2f}x"
         )
+    record["crossover"] = crossover_sweep(csv=csv)
     out_path = out_path or _REPO_ROOT / "BENCH_embedding_layout.json"
     out_path.write_text(json.dumps(record, indent=2))
     return record

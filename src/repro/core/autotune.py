@@ -17,9 +17,21 @@ The access-reduction knobs (DESIGN.md §6) sweep on the same harness:
 ``unique_cap_candidates`` / ``cache_rows_candidates`` extend the grid, with
 synthetic indices drawn from the supplied histograms so dedup/cache
 candidates are timed under the traffic they exist for.
+``kernel_path_candidates`` (DESIGN.md §11) sweeps the dedup'd gather
+implementation (one-hot GEMM vs true-sparse row gather) on the same grid;
+sparse candidates are skipped wherever the combination has no dedup to ride.
+
+:class:`TuningCache` memoizes whole sweeps on a (plan shape digest, backend)
+key so a drift hot-swap ``rebuild()`` whose re-plan lands on the same chunk
+shapes reuses the prior picks instead of re-timing (the access histograms
+are deliberately **excluded** from the key — shape-identical replans under a
+drifted distribution are exactly the reuse case).  Hits/misses surface in
+``plan.meta["tuning"]["cache"]`` and ``InferenceEngine.stats()["tuning"]``.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import time
 from typing import Sequence
 
@@ -36,6 +48,84 @@ from repro.core.strategies import Plan
 from repro.core.tables import TableSpec
 
 _BLOCK_R_CANDIDATES = (64, 128, 256, 512)
+
+
+class TuningCache:
+    """Sweep-result memo keyed on (plan shape digest, backend).
+
+    The digest covers everything that shapes the timed kernels — per-core
+    chunk inventory (table/rows/offset/strategy/replicas + per-chunk kernel
+    path), table dims, batch, the candidate grids, and the backend — and
+    nothing that doesn't (access histograms, table *contents*): a re-plan
+    that lands on the same shapes under new traffic is a hit by design.
+    ``save``/``load`` round-trip the store as JSON for cross-process reuse.
+    """
+
+    def __init__(self):
+        self._store: dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def lookup(self, key: str) -> dict | None:
+        rec = self._store.get(key)
+        if rec is None:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return rec
+
+    def store(self, key: str, record: dict) -> None:
+        self._store[key] = record
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._store),
+            "hits": self.hits,
+            "misses": self.misses,
+        }
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self._store, f)
+
+    def load(self, path) -> None:
+        with open(path) as f:
+            self._store.update(json.load(f))
+
+
+def plan_shape_digest(
+    plan: Plan,
+    tables: Sequence[TableSpec],
+    batch: int,
+    backend: str,
+    candidates: tuple = (),
+) -> str:
+    """Stable digest of everything that shapes an autotune sweep's kernels."""
+    kernel_meta = plan.meta.get("kernel") or {}
+    access_meta = plan.meta.get("cache") or {}
+    paths = [r.get("path") for r in kernel_meta.get("per_chunk") or []]
+    payload = {
+        "backend": backend,
+        "batch": int(batch),
+        "tables": [(t.rows, t.dim, t.seq) for t in tables],
+        "chunks": sorted(
+            (a.core, a.table_idx, a.row_offset, a.rows, str(a.strategy),
+             list(a.batch_frac))
+            for a in plan.assignments
+        ),
+        "sym": sorted(plan.symmetric_tables),
+        "access": [
+            int(access_meta.get("unique_cap") or 0),
+            int(access_meta.get("cache_rows") or 0),
+        ],
+        "kernel": [kernel_meta.get("path"), paths],
+        "candidates": [list(c) for c in candidates],
+    }
+    blob = json.dumps(payload, sort_keys=True, default=str).encode()
+    return hashlib.sha1(blob).hexdigest()[:16]
 
 
 def _heaviest_core(packed: PackedPlan) -> int:
@@ -55,30 +145,60 @@ def autotune_block_sizes(
     block_b_candidates: Sequence[int | None] = (None,),
     unique_cap_candidates: Sequence[int | None] = (None,),
     cache_rows_candidates: Sequence[int | None] = (None,),
+    kernel_path_candidates: Sequence[str | None] = (None,),
     freqs=None,
     iters: int = 2,
     seed: int = 0,
+    cache: TuningCache | None = None,
 ) -> dict:
-    """Sweep (block_r, block_b[, unique_cap, cache_rows]), record
-    ``plan.meta["tuning"]``, return the best combination.
+    """Sweep (block_r, block_b[, unique_cap, cache_rows, kernel_path]),
+    record ``plan.meta["tuning"]``, return the best combination.
 
-    Returns ``{"block_r", "block_b", "unique_cap", "cache_rows"}`` — feed
-    straight into :func:`repro.core.partition.pack_plan`.  The access-
-    reduction axes (DESIGN.md §6) default to the single candidate ``None``
-    = "whatever ``plan.meta['cache']`` selected", so the classic two-axis
-    sweep is unchanged; pass explicit candidate lists (0 = off) to sweep
-    dedup width / residency-cache size, with ``freqs`` supplied whenever a
-    nonzero ``cache_rows`` candidate needs its carve.  Synthetic indices
-    are drawn from ``freqs`` when given (a dedup/cache sweep timed under
-    uniform indices would undersell both knobs).
+    Returns ``{"block_r", "block_b", "unique_cap", "cache_rows",
+    "kernel_path"}`` — feed straight into
+    :func:`repro.core.partition.pack_plan`.  The access-reduction axes
+    (DESIGN.md §6) default to the single candidate ``None`` = "whatever
+    ``plan.meta['cache']`` selected", so the classic two-axis sweep is
+    unchanged; pass explicit candidate lists (0 = off) to sweep dedup width
+    / residency-cache size, with ``freqs`` supplied whenever a nonzero
+    ``cache_rows`` candidate needs its carve.  Synthetic indices are drawn
+    from ``freqs`` when given (a dedup/cache sweep timed under uniform
+    indices would undersell both knobs).  ``kernel_path_candidates``
+    likewise defaults to ``None`` = the planner's cost-modeled choice
+    (DESIGN.md §11); ``"sparse"`` candidates are dropped on combinations
+    whose effective dedup width is 0 (nothing to ride).
+
+    ``cache`` (a :class:`TuningCache`) short-circuits the whole sweep when
+    the plan-shape digest has been swept before on this backend — the
+    prior record is re-stamped into ``plan.meta["tuning"]`` with a
+    ``cache`` hit marker and its best returned without timing anything.
     """
     if not plan.assignments:
         plan.meta["tuning"] = {"candidates": [], "best": None}
         return {
             "block_r": None, "block_b": None,
-            "unique_cap": None, "cache_rows": None,
+            "unique_cap": None, "cache_rows": None, "kernel_path": None,
         }
     from repro.core.cost_model import freq_of
+
+    backend = jax.default_backend()
+    cache_key = None
+    if cache is not None:
+        cache_key = plan_shape_digest(
+            plan, tables, batch, backend,
+            (
+                block_r_candidates, block_b_candidates,
+                unique_cap_candidates, cache_rows_candidates,
+                kernel_path_candidates, (iters, seed),
+            ),
+        )
+        rec = cache.lookup(cache_key)
+        if rec is not None:
+            plan.meta["tuning"] = {
+                **rec["tuning"],
+                "cache": {"hit": True, "key": cache_key, **cache.stats()},
+            }
+            return dict(rec["best"])
 
     s_max = max(t.seq for t in tables)
     rng = np.random.default_rng(seed)
@@ -93,51 +213,73 @@ def autotune_block_sizes(
             idx[i, :, : t.seq] = rng.integers(0, t.rows, (batch, t.seq))
     idx = jnp.asarray(idx)
 
-    backend = jax.default_backend()
+    meta_cap = int((plan.meta.get("cache") or {}).get("unique_cap") or 0)
     candidates = []
     for br in dict.fromkeys(int(c) for c in block_r_candidates):
         for bb in dict.fromkeys(block_b_candidates):
             for uc in dict.fromkeys(unique_cap_candidates):
                 for cr in dict.fromkeys(cache_rows_candidates):
-                    packed = pack_plan(
-                        plan, tables, None, block_r=br, block_b=bb,
-                        unique_cap=uc, cache_rows=cr, freqs=freqs,
-                    )
-                    local = packed.strip_core(_heaviest_core(packed))
-                    fn = jax.jit(
-                        lambda p, i: _fused_asym_lookup(
-                            p, i, n_tables=len(tables)
+                    for kp in dict.fromkeys(kernel_path_candidates):
+                        eff_cap = meta_cap if uc is None else int(uc)
+                        if kp == "sparse" and not eff_cap:
+                            continue  # no dedup machinery to ride
+                        packed = pack_plan(
+                            plan, tables, None, block_r=br, block_b=bb,
+                            unique_cap=uc, cache_rows=cr, freqs=freqs,
+                            kernel_path=kp,
                         )
-                    )
-                    jax.block_until_ready(fn(local, idx))  # compile/warm
-                    t0 = time.perf_counter()
-                    for _ in range(iters):
-                        jax.block_until_ready(fn(local, idx))
-                    wall_us = (time.perf_counter() - t0) / iters * 1e6
-                    lay = plan.meta["layout"]
-                    candidates.append(
-                        {
-                            "block_r": br,
-                            "block_b": 0 if bb is None else int(bb),
-                            "unique_cap": int(packed.unique_cap),
-                            "cache_rows": int(packed.cache_rows),
-                            "n_steps": lay["n_steps"],
-                            "padding_frac": lay["padding_frac"],
-                            "chunk_bytes": lay["chunk_bytes"],
-                            "wall_us": wall_us,
-                        }
-                    )
+                        local = packed.strip_core(_heaviest_core(packed))
+                        fn = jax.jit(
+                            lambda p, i: _fused_asym_lookup(
+                                p, i, n_tables=len(tables)
+                            )
+                        )
+                        jax.block_until_ready(fn(local, idx))  # compile/warm
+                        t0 = time.perf_counter()
+                        for _ in range(iters):
+                            jax.block_until_ready(fn(local, idx))
+                        wall_us = (time.perf_counter() - t0) / iters * 1e6
+                        lay = plan.meta["layout"]
+                        candidates.append(
+                            {
+                                "block_r": br,
+                                "block_b": 0 if bb is None else int(bb),
+                                "unique_cap": int(packed.unique_cap),
+                                "cache_rows": int(packed.cache_rows),
+                                "kernel_path": (
+                                    packed.kernel_path if kp is None else kp
+                                ),
+                                "n_steps": lay["n_steps"],
+                                "padding_frac": lay["padding_frac"],
+                                "chunk_bytes": lay["chunk_bytes"],
+                                "wall_us": wall_us,
+                            }
+                        )
+    if not candidates:
+        raise ValueError(
+            "no feasible autotune candidates: every combination was skipped "
+            "(kernel_path='sparse' needs a nonzero unique_cap candidate)"
+        )
     best = min(candidates, key=lambda c: c["wall_us"])
-    plan.meta["tuning"] = {
+    tuning = {
         "candidates": candidates,
         "best": dict(best),
         "backend": backend,
         "compiled": backend == "tpu",
         "iters": iters,
     }
-    return {
+    result = {
         "block_r": best["block_r"],
         "block_b": best["block_b"] or None,
         "unique_cap": best["unique_cap"],
         "cache_rows": best["cache_rows"],
+        "kernel_path": best["kernel_path"],
     }
+    plan.meta["tuning"] = tuning
+    if cache is not None:
+        cache.store(cache_key, {"tuning": tuning, "best": dict(result)})
+        plan.meta["tuning"] = {
+            **tuning,
+            "cache": {"hit": False, "key": cache_key, **cache.stats()},
+        }
+    return result

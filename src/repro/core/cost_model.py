@@ -38,6 +38,17 @@ existing consumer is untouched:
   (per-chunk approximation: each chunk prices its own top-C rows as cached;
   the packer's actual per-core allocation is modeled exactly by
   ``repro.core.traffic.modeled_plan_traffic``).
+
+Kernel-path crossover pricing (DESIGN.md §11): the dedup'd unique-row gather
+inside the fused kernel has two implementations — the one-hot MXU GEMM
+(dense in ``U·R``: it materializes a (U, block_r) equality matrix per step
+and pays matmul FLOPs over the whole chunk) and the true-sparse row gather
+(pays only ``U`` row copies plus a per-step loop overhead).
+:meth:`CostModel.kernel_path_costs` prices both from the chunk's expected
+unique-row count (access-mass-scaled) and
+:meth:`CostModel.best_kernel_path` picks the cheaper; the planner records
+the per-chunk choice in ``plan.meta["kernel"]`` and pack time emits it into
+the step schedule.
 """
 from __future__ import annotations
 
@@ -54,6 +65,7 @@ __all__ = [
     "ASCEND_910",
     "TPU_V5E",
     "HARDWARE",
+    "KERNEL_PATHS",
     "Betas",
     "CostModel",
     "HardwareSpec",
@@ -62,6 +74,20 @@ __all__ = [
     "freq_of",
     "lif",
 ]
+
+# the fused kernel's unique-row gather implementations (DESIGN.md §11);
+# "auto" (planner/engine spelling) means cost-modeled per-chunk argmin.
+KERNEL_PATHS = ("onehot", "sparse")
+
+# sparse-gather calibration constants (seconds): per-unique-row control
+# overhead of the masked dynamic-slice row copy, and per-row-block-step
+# fixed overhead of the gather loop (trip count is the static unique cap,
+# paid once per streamed window whether or not rows land in it).
+_SPARSE_GATHER_OVERHEAD = 2e-9
+_SPARSE_STEP_OVERHEAD = 5e-8
+# nominal fused-kernel row-block when the caller doesn't know the pack's
+# (matches partition._RAGGED_BLOCK_R)
+_NOMINAL_BLOCK_R = 512
 
 
 # --------------------------------------------------------------------------
@@ -253,6 +279,101 @@ class CostModel:
     def fits_l1(self, table: TableSpec, rows: int | None = None) -> bool:
         rows = table.rows if rows is None else rows
         return rows * table.row_bytes <= self.hardware.l1_bytes
+
+    # -- kernel-path (dense-vs-sparse gather) crossover ---------------------
+
+    def expected_chunk_unique(
+        self,
+        table: TableSpec,
+        batch: int,
+        cores: int,
+        freq=None,
+        row_range: tuple[int, int] | None = None,
+    ) -> float:
+        """Expected distinct rows of chunk ``row_range`` hit per batch pass.
+
+        With a histogram this is ``freq.expected_unique``; under the uniform
+        assumption it is the closed-form occupancy ``R·(1-(1-1/R)^n)`` of
+        the chunk's share of the lookups.  Always ≤ min(lookups, rows)."""
+        lo, hi = row_range if row_range is not None else (0, table.rows)
+        rows = max(hi - lo, 1)
+        n = batch * table.seq / max(cores, 1)
+        if freq is not None:
+            mass = freq.range_mass(lo, hi)
+            u = freq.expected_unique(lo, hi, n)
+            return float(min(u, n * mass, rows))
+        n_c = n * rows / max(table.rows, 1)
+        u = rows * (1.0 - (1.0 - 1.0 / rows) ** n_c)
+        return float(min(u, n_c, rows))
+
+    def kernel_path_costs(
+        self,
+        table: TableSpec,
+        batch: int,
+        cores: int,
+        freq=None,
+        row_range: tuple[int, int] | None = None,
+        *,
+        block_r: int = _NOMINAL_BLOCK_R,
+    ) -> dict:
+        """Price the dedup'd unique-row gather both ways for one chunk.
+
+        One-hot (per batch pass): a ``(U, block_r)`` equality one-hot is
+        materialized per row-block step and GEMM'd against the window — per
+        unique row the full chunk width ``R`` pays a vector-unit compare,
+        2·E MXU flops, and 4 one-hot bytes through VMEM.  Sparse: each
+        unique row is one masked dynamic-slice copy (``E`` row bytes through
+        VMEM + fixed control overhead) plus a per-step loop overhead that
+        scales with the chunk's step count — the crossover is decided by
+        ``U·R`` vs ``U·E + steps`` (chunk access mass is inside ``U``).
+
+        Returns ``{"onehot", "sparse"}`` seconds plus ``"onehot_bytes"`` /
+        ``"sparse_bytes"`` (the modeled gather-side traffic the benches
+        report), ``"unique"``, and ``"steps"``.  The shared segment-sum
+        scatter (``cnt @ rows_u``) is identical on both paths and omitted —
+        it cannot move the argmin.
+        """
+        lo, hi = row_range if row_range is not None else (0, table.rows)
+        rows = max(hi - lo, 1)
+        u = self.expected_chunk_unique(table, batch, cores, freq, row_range)
+        hw = self.hardware
+        e = table.dim
+        itemsize = table.row_bytes / max(table.dim, 1)
+        steps = float(-(-rows // max(block_r, 1)))
+        t_onehot = u * rows * (
+            1.0 / hw.vector_flops
+            + 2.0 * e / hw.matmul_flops
+            + 4.0 / hw.l1_bw
+        )
+        t_sparse = (
+            u * (e * itemsize / hw.l1_bw + _SPARSE_GATHER_OVERHEAD)
+            + steps * _SPARSE_STEP_OVERHEAD
+        )
+        return {
+            "onehot": t_onehot,
+            "sparse": t_sparse,
+            "onehot_bytes": u * rows * 4.0,
+            "sparse_bytes": u * e * itemsize + steps * u * 4.0,
+            "unique": u,
+            "steps": steps,
+        }
+
+    def best_kernel_path(
+        self,
+        table: TableSpec,
+        batch: int,
+        cores: int,
+        freq=None,
+        row_range: tuple[int, int] | None = None,
+        *,
+        block_r: int = _NOMINAL_BLOCK_R,
+    ) -> tuple[str, dict]:
+        """Cost-modeled per-chunk gather choice: (path, the cost record)."""
+        costs = self.kernel_path_costs(
+            table, batch, cores, freq, row_range, block_r=block_r
+        )
+        path = "sparse" if costs["sparse"] < costs["onehot"] else "onehot"
+        return path, costs
 
     # -- fitting ------------------------------------------------------------
 

@@ -85,6 +85,8 @@ class PartitionedEmbeddingBag:
         freqs=None,
         unique_cap: int | None = None,
         cache_rows: int | None = None,
+        kernel_path: str | None = None,
+        tuning_cache=None,
     ) -> PackedPlan:
         """Materialize the plan.  ``autotune=True`` sweeps the fused kernel's
         ``block_r``/``block_b`` first (recorded in ``plan.meta["tuning"]``).
@@ -93,7 +95,11 @@ class PartitionedEmbeddingBag:
         ``plan.meta["cache"]`` (set by ``planner_kwargs`` ``dedup=``/
         ``cache=``); ``freqs`` defaults to the histograms the plan was priced
         under, so a dedup/cache plan packs its residency cache without extra
-        arguments."""
+        arguments.  ``kernel_path`` (``None`` = the planner's cost-modeled
+        choice in ``plan.meta["kernel"]``) selects the dedup'd gather
+        implementation; ``tuning_cache`` (a
+        :class:`repro.core.autotune.TuningCache`) lets the autotune sweep
+        reuse prior picks for shape-identical plans."""
         layout = layout or self.layout
         if freqs is None:
             freqs = self.planner_kwargs.get("freqs")
@@ -102,7 +108,7 @@ class PartitionedEmbeddingBag:
 
             best = autotune_block_sizes(
                 self.plan, self.workload.tables, batch=self.workload.batch,
-                freqs=freqs,
+                freqs=freqs, cache=tuning_cache,
             )
             block_r, block_b = best["block_r"], block_b or best["block_b"]
             # the sweep's winning access-reduction sizes ship with its block
@@ -111,6 +117,8 @@ class PartitionedEmbeddingBag:
                 unique_cap = best["unique_cap"]
             if cache_rows is None:
                 cache_rows = best["cache_rows"]
+            if kernel_path is None:
+                kernel_path = best["kernel_path"]
         return pack_plan(
             self.plan,
             self.workload.tables,
@@ -122,6 +130,7 @@ class PartitionedEmbeddingBag:
             freqs=freqs,
             unique_cap=unique_cap,
             cache_rows=cache_rows,
+            kernel_path=kernel_path,
         )
 
     def layout_summary(self) -> dict:

@@ -63,6 +63,13 @@ packs; all values are JSON-able):
 * ``distribution`` — per-table access-histogram summaries the plan was
   priced under (``None`` = the uniform assumption; see
   ``repro.core.planner._distribution_meta`` and DESIGN.md §5);
+* ``kernel``       — the kernel-path (dense-vs-sparse gather) record
+  (DESIGN.md §11), written by ``plan_asymmetric(kernel_path=)``: ``path``
+  (the requested mode ``auto|onehot|sparse``), ``dedup_armed``,
+  ``per_chunk`` (one record per assignment: the chosen path + modeled
+  per-path microseconds), ``n_sparse``/``n_onehot``; extended by
+  :func:`pack_plan` with ``packed`` (the realized schedule: resolved
+  ``path``, ``sparse_chunks``/``onehot_chunks``, ``sparse_steps``);
 * ``cache``        — the access-reduction subsystem record (DESIGN.md §6),
   written by ``plan_asymmetric(dedup=/cache=)`` and extended by
   :func:`pack_plan`: ``dedup`` (bool), ``unique_cap`` (static per-slot
@@ -154,6 +161,7 @@ class PackedPlan:
     step_base: Any  # (K, T) int32 chunk-local first row of the step's block
     step_block: Any  # (K, T) int32 row-block index into the ragged buffer
     step_strategy: Any  # (K, T) int32 strategy code of the step's slot
+    step_kpath: Any  # (K, T) int32 gather path per step (0 onehot, 1 sparse)
     # owner-sharded sparse rejoin maps (replicated)
     rejoin_send: Any  # (K, K, n_send) int32 table ids, -1 = none
     rejoin_owned_pos: Any  # (N,) int32 bucket position at the owner, -1
@@ -173,11 +181,13 @@ class PackedPlan:
     block_b: int = 0  # fused-kernel resident batch rows; 0 = auto
     unique_cap: int = 0  # batch-dedup width per slot; 0 = dedup off
     cache_rows: int = 0  # padded residency-cache rows; 0 = cache off
+    kernel_path: str = "onehot"  # resolved gather mode; "onehot" = no sparse
 
     _ARRAY_FIELDS = (
         "chunk_data", "slot_table", "slot_offset", "slot_rows",
         "slot_row_start", "slot_strategy", "slot_rep", "slot_nrep",
         "step_slot", "step_base", "step_block", "step_strategy",
+        "step_kpath",
         "rejoin_send", "rejoin_owned_pos", "rejoin_bucket",
         "sym_data", "sym_table", "sym_rows", "sym_strategy",
         "cache_data", "cache_remap",
@@ -192,7 +202,7 @@ class PackedPlan:
         children = tuple(getattr(self, f) for f in self._ARRAY_FIELDS)
         aux = (
             self.layout, self.block_r, self.slot_window, self.block_b,
-            self.unique_cap, self.cache_rows,
+            self.unique_cap, self.cache_rows, self.kernel_path,
         )
         return children, aux
 
@@ -325,6 +335,7 @@ def pack_plan(
     freqs=None,
     unique_cap: int | None = None,
     cache_rows: int | None = None,
+    kernel_path: str | None = None,
 ) -> PackedPlan:
     """Materialize a Plan into the packed executor layout.
 
@@ -345,6 +356,17 @@ def pack_plan(
     carve (top-mass rows per core + the buffer-row→cache-position remap)
     needs the access histograms: pass the same ``freqs`` the plan was priced
     under.  Ragged layout only.
+
+    ``kernel_path`` selects the dedup'd unique-row gather implementation per
+    step (DESIGN.md §11): ``"onehot"`` (the MXU one-hot GEMM), ``"sparse"``
+    (the true-sparse row gather — forces every real step sparse), or
+    ``"auto"`` (per-chunk from the planner's cost-modeled choice in
+    ``plan.meta["kernel"]["per_chunk"]``; chunks without a record stay
+    one-hot).  ``None`` resolves from ``plan.meta["kernel"]["path"]`` (the
+    planner's request), defaulting to ``"onehot"``.  The sparse path rides
+    the dedup uniq/cnt machinery, so it needs ``unique_cap > 0`` — under
+    ``"auto"`` a dedup-off pack silently stays one-hot (the autotuner sweeps
+    ``unique_cap=0`` candidates); forcing ``"sparse"`` without dedup raises.
     """
     if layout not in ("ragged", "dense"):
         raise ValueError(f"unknown layout {layout!r}")
@@ -360,6 +382,32 @@ def pack_plan(
         )
     if layout == "dense" and (unique_cap or cache_rows):
         raise ValueError("dedup/cache require layout='ragged'")
+    kernel_meta = plan.meta.get("kernel") or {}
+    if kernel_path is None:
+        kernel_path = kernel_meta.get("path") or "onehot"
+    if kernel_path not in ("onehot", "sparse", "auto"):
+        raise ValueError(f"unknown kernel_path {kernel_path!r}")
+    if kernel_path == "sparse":
+        if layout == "dense":
+            raise ValueError("kernel_path='sparse' requires layout='ragged'")
+        if not unique_cap:
+            raise ValueError(
+                "kernel_path='sparse' requires batch dedup (unique_cap > 0): "
+                "the sparse gather rides the dedup uniq/cnt machinery"
+            )
+    # per-assignment gather path: forced mode applies everywhere; "auto"
+    # follows the planner's per-chunk cost-model picks (parallel to
+    # plan.assignments — per_core() returns the same objects).
+    path_of: dict[int, str] = {}
+    if kernel_path == "sparse":
+        path_of = {id(a): "sparse" for a in plan.assignments}
+    elif kernel_path == "auto" and unique_cap:
+        per_chunk = kernel_meta.get("per_chunk") or []
+        if len(per_chunk) == len(plan.assignments):
+            path_of = {
+                id(a): rec.get("path", "onehot")
+                for a, rec in zip(plan.assignments, per_chunk)
+            }
     e = tables[0].dim
     if any(t.dim != e for t in tables):
         raise ValueError("all tables must share the embedding dim E")
@@ -417,6 +465,7 @@ def pack_plan(
         step_base = np.zeros((k, 0), np.int32)
         step_block = np.zeros((k, 0), np.int32)
         step_strategy = np.zeros((k, 0), np.int32)
+        step_kpath = np.zeros((k, 0), np.int32)
         cache_data = jnp.zeros((k, 0, e), dtype)
         cache_remap = jnp.zeros((k, 1), jnp.int32)
         br = 0
@@ -450,19 +499,20 @@ def pack_plan(
             )
             for core in range(k)
         }
-        steps: list[list[tuple[int, int, int, int]]] = []
+        steps: list[list[tuple[int, int, int, int, int]]] = []
         slot_window = br
         t_needed = br
         for core in range(k):
             cur = 0
-            core_steps: list[tuple[int, int, int, int]] = []
+            core_steps: list[tuple[int, int, int, int, int]] = []
             for s_i in core_order[core]:
                 a = per_core[core][s_i]
                 alloc = _align(a.rows + 1, br)
                 slot_row_start[core, s_i] = cur
                 code = STRATEGY_CODE[a.strategy]
+                kp = 1 if path_of.get(id(a)) == "sparse" else 0
                 for j in range(alloc // br):
-                    core_steps.append((s_i, j * br, cur // br + j, code))
+                    core_steps.append((s_i, j * br, cur // br + j, code, kp))
                 cur += alloc
                 slot_window = max(slot_window, alloc)
             steps.append(core_steps)
@@ -536,12 +586,14 @@ def pack_plan(
         step_base = np.zeros((k, n_steps), np.int32)
         step_block = np.zeros((k, n_steps), np.int32)
         step_strategy = np.zeros((k, n_steps), np.int32)
+        step_kpath = np.zeros((k, n_steps), np.int32)
         for core, core_steps in enumerate(steps):
-            for t, (s_i, base, blk, code) in enumerate(core_steps):
+            for t, (s_i, base, blk, code, kp) in enumerate(core_steps):
                 step_slot[core, t] = s_i
                 step_base[core, t] = base
                 step_block[core, t] = blk
                 step_strategy[core, t] = code
+                step_kpath[core, t] = kp
 
     owner, rejoin_bucket, rejoin_owned_pos, rejoin_send = _rejoin_maps(
         plan, len(tables), k
@@ -568,6 +620,21 @@ def pack_plan(
         "owned_per_core": [
             int((rejoin_bucket[c] >= 0).sum()) for c in range(k)
         ],
+    }
+
+    # realized gather-path schedule; a pack with zero sparse steps resolves
+    # to plain "onehot" so the executor's compiled graph (and its cache key)
+    # is unchanged from a pre-kernel-path pack.
+    n_sparse_steps = int((step_kpath == 1).sum())
+    kernel_resolved = kernel_path if n_sparse_steps else "onehot"
+    n_sparse_chunks = sum(
+        1 for a in plan.assignments if path_of.get(id(a)) == "sparse"
+    )
+    plan.meta.setdefault("kernel", {})["packed"] = {
+        "path": kernel_resolved,
+        "sparse_chunks": n_sparse_chunks,
+        "onehot_chunks": len(plan.assignments) - n_sparse_chunks,
+        "sparse_steps": n_sparse_steps,
     }
 
     # symmetric group
@@ -605,6 +672,7 @@ def pack_plan(
         step_base=jnp.asarray(step_base),
         step_block=jnp.asarray(step_block),
         step_strategy=jnp.asarray(step_strategy),
+        step_kpath=jnp.asarray(step_kpath),
         rejoin_send=jnp.asarray(rejoin_send),
         rejoin_owned_pos=jnp.asarray(rejoin_owned_pos),
         rejoin_bucket=jnp.asarray(rejoin_bucket),
@@ -620,6 +688,7 @@ def pack_plan(
         block_b=int(block_b or 0),
         unique_cap=int(unique_cap),
         cache_rows=int(cache_rows),
+        kernel_path=kernel_resolved,
     )
 
 
@@ -829,6 +898,11 @@ def _fused_asym_lookup(
             unique_cap=packed.unique_cap,
             cache=cache,
             hidx=hidx,
+            # kernel_path is static aux: an all-onehot pack compiles the
+            # exact pre-kernel-path graph (no selector prefetch at all).
+            step_kpath=(
+                packed.step_kpath if packed.kernel_path != "onehot" else None
+            ),
         )  # (S, B, E) f32
     out = jnp.zeros((n_tables, b, e), jnp.float32)
     return out.at[jnp.maximum(ti, 0)].add(
@@ -975,6 +1049,7 @@ def partitioned_lookup(
         block_b=packed.block_b,
         unique_cap=packed.unique_cap,
         cache_rows=packed.cache_rows,
+        kernel_path=packed.kernel_path,
     )
     fn = compat.shard_map(
         spmd,

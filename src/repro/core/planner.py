@@ -402,6 +402,7 @@ def plan_asymmetric(
     cache: bool = False,
     cache_target: float = 0.75,
     max_cache_rows: int = 4096,
+    kernel_path: str = "auto",
 ) -> Plan:
     """Paper §III-B greedy asymmetric planner.
 
@@ -430,8 +431,24 @@ def plan_asymmetric(
     cache is sized by :func:`select_access_reduction`, and the chosen
     ``unique_cap`` (max expected unique rows over the placed chunks, with
     headroom) is recorded in ``plan.meta["cache"]`` for ``pack_plan``.
+
+    ``kernel_path`` (DESIGN.md §11) extends the per-chunk strategy choice to
+    the *gather implementation* inside the fused kernel: ``"auto"``
+    (default) prices every placed chunk's dedup'd unique-row gather both
+    ways (``CostModel.best_kernel_path``) and records the per-chunk argmin
+    in ``plan.meta["kernel"]``; ``"onehot"``/``"sparse"`` force one path
+    everywhere.  The sparse path rides the dedup machinery, so without
+    ``dedup=True`` auto resolves to all-one-hot and forcing ``"sparse"``
+    raises.
     """
     tables, batch = workload.tables, workload.batch
+    if kernel_path not in ("auto", "onehot", "sparse"):
+        raise ValueError(f"unknown kernel_path {kernel_path!r}")
+    if kernel_path == "sparse" and not dedup:
+        raise ValueError(
+            "kernel_path='sparse' requires dedup=True: the sparse gather "
+            "rides the dedup uniq/cnt machinery"
+        )
     _validate_freqs(freqs, len(tables))
     lpt = lpt or freqs is not None
     access = None
@@ -657,6 +674,41 @@ def plan_asymmetric(
             cap = max(cap, min(1.25 * u, float(a.rows), n))
         access["unique_cap"] = int(-(-int(cap) // 8) * 8)
 
+    # per-chunk gather-path choice (DESIGN.md §11): price the dedup'd
+    # unique-row gather both ways for every placed chunk; without dedup the
+    # sparse path has no uniq/cnt machinery to ride, so auto is all-one-hot
+    # (the records still carry both modeled costs for reporting).
+    dedup_armed = bool(access is not None and access["dedup"])
+    per_chunk = []
+    n_sparse = 0
+    for a in assignments:
+        chunk_tab = dataclasses.replace(tables[a.table_idx], rows=a.rows)
+        eff_batch = batch // max(a.replicas, 1)
+        auto_path, kcosts = model.best_kernel_path(
+            chunk_tab, eff_batch, 1, freq_of(freqs, a.table_idx),
+            (a.row_offset, a.row_offset + a.rows),
+        )
+        if kernel_path == "auto":
+            path = auto_path if dedup_armed else "onehot"
+        else:
+            path = kernel_path
+        n_sparse += path == "sparse"
+        per_chunk.append({
+            "table": a.table_idx,
+            "core": a.core,
+            "rows": a.rows,
+            "path": path,
+            "onehot_us": kcosts["onehot"] * 1e6,
+            "sparse_us": kcosts["sparse"] * 1e6,
+        })
+    kernel_meta = {
+        "path": kernel_path,
+        "dedup_armed": dedup_armed,
+        "per_chunk": per_chunk,
+        "n_sparse": int(n_sparse),
+        "n_onehot": len(per_chunk) - int(n_sparse),
+    }
+
     plan = Plan(
         workload_name=workload.name,
         n_cores=n_cores,
@@ -676,6 +728,7 @@ def plan_asymmetric(
     )
     if access is not None:
         plan.meta["cache"] = access
+    plan.meta["kernel"] = kernel_meta
     plan.validate(tables)
     return plan
 

@@ -22,9 +22,15 @@ per executed batch.
 :func:`modeled_plan_traffic` additionally reports the access-reduction
 subsystem's pre- vs post-dedup lookup bytes and the residency-cache hit
 rate (DESIGN.md §6) when asked (``dedup=``/``cache_rows=``).
+
+:func:`modeled_kernel_path_traffic` accounts the dedup'd unique-row gather
+both ways per chunk (one-hot materialization bytes vs sparse gather bytes,
+DESIGN.md §11) and totals the plan's recorded per-chunk choices against the
+two forced modes — the kernelbench crossover columns.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Sequence
 
 import numpy as np
@@ -35,7 +41,11 @@ from repro.core.strategies import Plan, Strategy
 from repro.core.tables import TableSpec
 from repro.kernels.embedding_multi import ragged_block_b
 
-__all__ = ["modeled_hbm_traffic", "modeled_plan_traffic"]
+__all__ = [
+    "modeled_hbm_traffic",
+    "modeled_kernel_path_traffic",
+    "modeled_plan_traffic",
+]
 
 
 def modeled_hbm_traffic(
@@ -258,3 +268,81 @@ def modeled_plan_traffic(
             "reduction_vs_pre": total / max(post_total, 1e-30),
         }
     return out
+
+
+def modeled_kernel_path_traffic(
+    plan: Plan,
+    tables: Sequence[TableSpec],
+    batch: int,
+    freqs=None,
+    *,
+    model=None,
+    block_r: int | None = None,
+) -> dict:
+    """Modeled gather-side cost/bytes of the kernel-path choice per chunk
+    (DESIGN.md §11) — the crossover columns the benches report.
+
+    Per placed chunk, prices the dedup'd unique-row gather both ways with
+    :meth:`CostModel.kernel_path_costs` (one-hot: ``U·R`` equality
+    materialization + MXU flops; sparse: ``U`` row copies + per-step loop
+    overhead) and totals three schedules: forced one-hot, forced sparse, and
+    ``auto`` = the plan's recorded per-chunk picks
+    (``plan.meta["kernel"]["per_chunk"]``; absent records fall back to the
+    per-chunk argmin, which is what the planner would have recorded).  By
+    construction ``auto_us <= min(onehot_us, sparse_us)`` — the acceptance
+    invariant the bench gate checks.
+    """
+    from repro.core.cost_model import analytic_model
+
+    model = model or analytic_model()
+    block_r = (
+        block_r
+        or int((plan.meta.get("layout") or {}).get("block_r") or 0)
+        or 512
+    )
+    per_chunk_meta = (plan.meta.get("kernel") or {}).get("per_chunk") or []
+    per_chunk = []
+    tot = {
+        "onehot_us": 0.0, "sparse_us": 0.0, "auto_us": 0.0,
+        "onehot_bytes": 0.0, "sparse_bytes": 0.0, "auto_bytes": 0.0,
+    }
+    for i, a in enumerate(plan.assignments):
+        chunk_tab = dataclasses.replace(tables[a.table_idx], rows=a.rows)
+        eff_batch = batch // max(a.replicas, 1)
+        costs = model.kernel_path_costs(
+            chunk_tab, eff_batch, 1, freq_of(freqs, a.table_idx),
+            (a.row_offset, a.row_offset + a.rows), block_r=block_r,
+        )
+        argmin = "sparse" if costs["sparse"] < costs["onehot"] else "onehot"
+        path = (
+            per_chunk_meta[i].get("path", argmin)
+            if i < len(per_chunk_meta) else argmin
+        )
+        tot["onehot_us"] += costs["onehot"] * 1e6
+        tot["sparse_us"] += costs["sparse"] * 1e6
+        tot["auto_us"] += costs[path] * 1e6
+        tot["onehot_bytes"] += costs["onehot_bytes"]
+        tot["sparse_bytes"] += costs["sparse_bytes"]
+        tot["auto_bytes"] += costs[f"{path}_bytes"]
+        per_chunk.append({
+            "table": a.table_idx,
+            "core": a.core,
+            "rows": a.rows,
+            "unique": costs["unique"],
+            "path": path,
+            "onehot_us": costs["onehot"] * 1e6,
+            "sparse_us": costs["sparse"] * 1e6,
+            "onehot_bytes": costs["onehot_bytes"],
+            "sparse_bytes": costs["sparse_bytes"],
+        })
+    n_sparse = sum(1 for r in per_chunk if r["path"] == "sparse")
+    return {
+        "batch": int(batch),
+        "block_r": int(block_r),
+        "per_chunk": per_chunk,
+        "n_sparse": n_sparse,
+        "n_onehot": len(per_chunk) - n_sparse,
+        **{k: float(v) for k, v in tot.items()},
+        "auto_never_worse": tot["auto_us"]
+        <= min(tot["onehot_us"], tot["sparse_us"]) * (1 + 1e-9) + 1e-12,
+    }

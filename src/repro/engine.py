@@ -371,6 +371,11 @@ class EngineConfig:
     layout: str = "ragged"
     use_kernels: str = "fused"  # "fused" | "xla"
     reduce_mode: str = "sparse"  # "sparse" | "psum" | "ring"
+    # dedup'd gather implementation (DESIGN.md §11): "auto" = the planner's
+    # per-chunk cost-modeled crossover choice, "onehot"/"sparse" force one
+    # path everywhere.  "sparse" rides the dedup machinery, so it requires
+    # an access policy that arms dedup.
+    kernel_path: str = "auto"
     # hardware / cost model
     hardware: str = "tpu_v5e"
     hardware_options: dict = dataclasses.field(default_factory=dict)
@@ -436,6 +441,20 @@ class EngineConfig:
             raise ValueError(
                 f"probe_every must be positive, got {self.probe_every}"
             )
+        if self.kernel_path not in ("auto", "onehot", "sparse"):
+            raise ValueError(
+                f"kernel_path must be 'auto', 'onehot' or 'sparse', "
+                f"got {self.kernel_path!r}"
+            )
+        if self.kernel_path == "sparse":
+            # the sparse gather rides the dedup uniq/cnt machinery, which
+            # only exists in the fused ragged asymmetric executor with a
+            # dedup-arming access policy.
+            if self.access not in ("dedup", "full"):
+                raise ValueError(
+                    "kernel_path='sparse' requires access='dedup' or 'full' "
+                    "(the sparse gather rides the dedup machinery)"
+                )
         if self.access != "none":
             # same constraints the serve CLI enforced: the access-reduction
             # subsystem lives in the fused ragged executor and its knobs are
@@ -536,6 +555,7 @@ class InferenceEngine:
         cost_model,
         manifest=None,
         scenario=None,
+        tuning_cache=None,
     ):
         self.config = config
         self.workload = workload
@@ -546,6 +566,7 @@ class InferenceEngine:
         self.cost_model = cost_model
         self.manifest = manifest  # pack-time integrity checksums (or None)
         self.scenario = scenario  # ScenarioModel wrapper (or None = pooled)
+        self.tuning_cache = tuning_cache  # sweep memo shared across rebuilds
         self._table_data = table_data
         self._server = None
 
@@ -561,6 +582,7 @@ class InferenceEngine:
         mesh=None,
         freqs=None,
         rng=None,
+        tuning_cache=None,
     ) -> "InferenceEngine":
         """Build the full pipeline from a declarative config.
 
@@ -569,7 +591,10 @@ class InferenceEngine:
         the string ``"abstract"`` for shape-only packing (dry runs).
         ``freqs`` overrides ``config.distribution`` with explicit per-table
         :class:`~repro.data.distributions.RowProbs` (how the drift engine
-        rebuilds from *measured* histograms).
+        rebuilds from *measured* histograms).  ``tuning_cache`` (a
+        :class:`repro.core.autotune.TuningCache`; default: a fresh one)
+        memoizes autotune sweeps — :meth:`rebuild` passes the engine's own
+        cache so a shape-identical drift replan reuses prior picks.
         """
         import dataclasses as _dc
 
@@ -608,6 +633,11 @@ class InferenceEngine:
         planner_kwargs.update(access.planner_kwargs(**config.access_options))
         if freqs is not None:
             planner_kwargs["freqs"] = freqs
+        if config.planner == "asymmetric":
+            # the per-chunk dense-vs-sparse crossover choice is priced by
+            # the planner and recorded in plan.meta["kernel"]; pack reads
+            # it back when no explicit kernel_path is given.
+            planner_kwargs.setdefault("kernel_path", config.kernel_path)
 
         import jax.numpy as jnp
 
@@ -630,7 +660,15 @@ class InferenceEngine:
             table_data = bag.init(rng if rng is not None else jax.random.PRNGKey(0))
         else:
             table_data = list(tables)
-        packed = bag.pack(table_data, **tuning.pack_kwargs(**config.tuning_options))
+        if tuning_cache is None:
+            from repro.core.autotune import TuningCache
+
+            tuning_cache = TuningCache()
+        packed = bag.pack(
+            table_data,
+            tuning_cache=tuning_cache,
+            **tuning.pack_kwargs(**config.tuning_options),
+        )
 
         integrity = INTEGRITY_POLICIES.create(config.integrity)
         manifest = integrity.manifest(
@@ -649,6 +687,7 @@ class InferenceEngine:
             table_data=table_data,
             cost_model=model,
             manifest=manifest,
+            tuning_cache=tuning_cache,
         )
 
     @classmethod
@@ -729,6 +768,7 @@ class InferenceEngine:
             cost_model=self.cost_model,
             manifest=self.manifest,
             scenario=self.scenario,
+            tuning_cache=self.tuning_cache,
         )
         return view
 
@@ -736,13 +776,16 @@ class InferenceEngine:
         """Same config + tables, re-planned/re-packed under new histograms —
         the shadow re-pack the drift policy runs off the hot path.  The
         scenario wrapper (tower params + step maker) carries over so a
-        hot-swap re-invokes the same model's ``make_step``."""
+        hot-swap re-invokes the same model's ``make_step``, and the tuning
+        cache carries over so a shape-identical re-plan skips the autotune
+        sweep (hits surface in ``stats()["tuning"]["cache"]``)."""
         engine = InferenceEngine.build(
             self._table_data if self._table_data is not None else "abstract",
             self.workload,
             self.config,
             mesh=self.mesh,
             freqs=freqs,
+            tuning_cache=self.tuning_cache,
         )
         engine.scenario = self.scenario
         return engine
@@ -983,7 +1026,7 @@ class InferenceEngine:
             "layout": self.bag.layout_summary(),
             "config": self.config.to_dict(),
         }
-        for key in ("cache", "tuning", "distribution"):
+        for key in ("cache", "tuning", "distribution", "kernel"):
             if plan.meta.get(key) is not None:
                 out[key] = plan.meta[key]
         if self._server is not None:
@@ -1024,6 +1067,21 @@ class InferenceEngine:
                 f"unique_cap={acc['unique_cap']} cache_rows={acc['cache_rows']} "
                 f"(modeled coverage={acc['coverage']:.2%})"
             )
+        kern = s.get("kernel")
+        if kern and kern.get("per_chunk"):
+            lines.append(
+                f"kernel path={kern['path']} "
+                f"({kern['n_sparse']} sparse / {kern['n_onehot']} one-hot chunks)"
+            )
+            for a, rec in zip(self.plan.assignments, kern["per_chunk"]):
+                strat = getattr(a.strategy, "name", str(a.strategy))
+                lines.append(
+                    f"  chunk core={rec['core']} table={rec['table']} "
+                    f"rows={rec['rows']} strategy={strat} "
+                    f"kernel={rec['path']} "
+                    f"(modeled onehot {rec['onehot_us']:.2f}us / "
+                    f"sparse {rec['sparse_us']:.2f}us)"
+                )
         lines.append(
             f"executor kernels={self.config.use_kernels} "
             f"reduce={self.config.reduce_mode} layout={self.config.layout}"

@@ -48,6 +48,22 @@ Access-reduction subsystem (DESIGN.md §6, both knobs off by default):
   conflict-free one-hot GEMM against the resident cache on each slot's
   first step.
 
+Kernel-path dispatch (``step_kpath``, DESIGN.md §11): the dedup'd unique-row
+gather has two implementations sharing the uniq/cnt machinery —
+
+* **onehot** (``kpath == 0``): materialize the ``(U, block_r)`` equality
+  one-hot and gather via a GEMM on the MXU (dense in ``U·block_r``);
+* **sparse** (``kpath == 1``): CSR-style true-sparse gather — ``uniq`` is
+  already sorted ascending, so a ``fori_loop`` of masked
+  ``dynamic_slice_in_dim`` row copies pulls each in-window unique row out of
+  the streamed ``(block_r, E)`` window directly; the shared multiplicity
+  GEMM (``cnt @ rows_u``) is the segment-sum scatter back to batch rows.
+
+Both produce the same ``rows_u`` **bitwise** (a one-hot matvec against
+finite data is an exact row copy: ``0·x + 1·row = row``), so the paths are
+interchangeable per step; pack time emits the per-step choice from the cost
+model's dense-vs-sparse crossover (``plan.meta["kernel"]``).
+
 :func:`multi_embedding_bag_dense` is the legacy kernel over the dense
 stacked-slot ``(S, R+1, E)`` layout, kept for layout comparison benchmarks
 (no dedup/cache support — ragged only).
@@ -123,6 +139,7 @@ def ragged_block_b(
 def _ragged_kernel(
     slot_ref, base_ref, blk_ref, strat_ref, *refs,
     block_r: int, seq: int, unique_cap: int, cache_rows: int,
+    use_kpath: bool = False,
 ):
     del slot_ref, blk_ref  # consumed by the index_maps
     t = pl.program_id(0)
@@ -133,6 +150,7 @@ def _ragged_kernel(
         # per-step work flags (bit 0: slot has spill, bit 1: slot has
         # cache hits) — lets the kernel skip guaranteed-zero loops.
         flags = refs.pop(0)[t]
+    kpath = refs.pop(0)[t] if use_kpath else None
     idx_ref = refs.pop(0)  # full lidx, or the overflow spill when dedup'd
     uniq_ref = refs.pop(0) if unique_cap else None
     cnt_ref = refs.pop(0) if unique_cap else None
@@ -178,8 +196,36 @@ def _ragged_kernel(
         # row-streamed cold alongside — but only on slots whose flag says
         # something actually spilled (the common case skips the dead loop).
         rel_u = uniq_ref[0] - base  # (U,); -1 pads never match
-        equ = (rel_u[:, None] == iota).astype(jnp.float32)  # (U, block_r)
-        rows_u = jnp.dot(equ, window, preferred_element_type=jnp.float32)
+
+        def _rows_onehot():
+            # dense gather: (U, block_r) equality one-hot @ window on the MXU
+            equ = (rel_u[:, None] == iota).astype(jnp.float32)
+            return jnp.dot(equ, window, preferred_element_type=jnp.float32)
+
+        def _rows_sparse():
+            # true-sparse gather: uniq is sorted, so each in-window unique
+            # row is a single masked dynamic_slice row copy — no U·block_r
+            # one-hot materialization.  Bit-identical to _rows_onehot: a
+            # one-hot matvec against finite data IS an exact row copy.
+            def gather(u, acc):
+                r = rel_u[u]
+                inb = (r >= 0) & (r < block_r)
+                row = jax.lax.dynamic_slice_in_dim(
+                    window, jnp.clip(r, 0, block_r - 1), 1, axis=0
+                )
+                row = jnp.where(inb, row, jnp.zeros_like(row))
+                return jax.lax.dynamic_update_slice_in_dim(acc, row, u, axis=0)
+
+            return jax.lax.fori_loop(
+                0, unique_cap, gather,
+                jnp.zeros((unique_cap, window.shape[1]), jnp.float32),
+            )
+
+        if use_kpath:
+            rows_u = jax.lax.cond(kpath == 1, _rows_sparse, _rows_onehot)
+        else:
+            rows_u = _rows_onehot()
+        # segment-sum scatter back to batch rows (shared by both paths)
         partial = jnp.dot(
             cnt_ref[0], rows_u, preferred_element_type=jnp.float32
         )
@@ -306,6 +352,7 @@ def multi_embedding_bag_ragged(
     unique_cap: int = 0,  # > 0 arms batch dedup (static cap per slot)
     cache: jax.Array | None = None,  # (C, E) resident hot-row mini-table
     hidx: jax.Array | None = None,  # (S, B, s) int32 cache positions, -1 miss
+    step_kpath: jax.Array | None = None,  # (n_steps,) 0=onehot 1=sparse
 ) -> jax.Array:
     """All slots' pooled lookups in one streaming pass -> (S, B, E) f32.
 
@@ -313,12 +360,20 @@ def multi_embedding_bag_ragged(
     (module docstring); with both off this is exactly the PR3 kernel.
     Callers must have already removed cache-hit lookups from ``lidx``
     (set to ``-1``) wherever ``hidx >= 0`` — the packed remap does this.
+    ``step_kpath`` selects the unique-row gather implementation per step
+    (0 = one-hot GEMM, 1 = true-sparse row gather) — dedup only, bitwise
+    interchangeable (module docstring).
     """
     t_rows, e = buffer.shape
     s_slots, b, seq = lidx.shape
     n_steps = step_slot.shape[0]
     if t_rows % block_r:
         raise ValueError("buffer rows must be a multiple of block_r")
+    if step_kpath is not None and not unique_cap:
+        raise ValueError(
+            "step_kpath (sparse kernel path) requires unique_cap > 0: the "
+            "sparse gather rides the dedup uniq/cnt machinery"
+        )
     cache_rows = 0 if cache is None else int(cache.shape[0])
     if cache_rows and hidx is None:
         raise ValueError("cache requires the hidx hot-position tensor")
@@ -337,9 +392,10 @@ def multi_embedding_bag_ragged(
         # spill (usually all -1), uniq/cnt drive the gather/scatter GEMMs.
         uniq, cnt, lidx = _dedup_indices(lidx, unique_cap)
 
+    use_kpath = step_kpath is not None
     kernel = functools.partial(
         _ragged_kernel, block_r=block_r, seq=seq,
-        unique_cap=unique_cap, cache_rows=cache_rows,
+        unique_cap=unique_cap, cache_rows=cache_rows, use_kpath=use_kpath,
     )
     prefetch = [
         step_slot.astype(jnp.int32),
@@ -362,6 +418,10 @@ def multi_embedding_bag_ragged(
             jnp.int32
         )
         prefetch.append(jnp.take(slot_flags, step_slot.astype(jnp.int32)))
+    if use_kpath:
+        # per-step gather-path selector, appended LAST so the positional
+        # index_map prefix (t, ss, sb, sk, ...) stays stable.
+        prefetch.append(step_kpath.astype(jnp.int32))
 
     # the step's slot-indexed batch tiles are resident across the slot's
     # (consecutive) steps — refetched only on slot change; the (block_r, E)

@@ -117,6 +117,29 @@ def test_distribution_sampling_in_range(cell):
             assert valid.size and valid.max() < t.rows
 
 
+def test_forced_sparse_kernel_cell():
+    """A forced kernel_path='sparse' matrix cell (DESIGN.md §11): the dlrm
+    scenario under its dedup-armed default config serves bit-identically
+    whether the dedup'd gather runs one-hot or true-sparse, and both match
+    the dense reference forward."""
+    scenario = get_scenario("dlrm", batch=BATCH)
+    base = {**SCENARIOS["dlrm"].default_config, "n_cores": 1}
+    outs = {}
+    engines = {}
+    rng_batch = scenario.sample_batch(np.random.default_rng(4), Zipf(1.2))
+    for kp in ("onehot", "sparse"):
+        cfg = EngineConfig.from_dict({**base, "kernel_path": kp})
+        engines[kp] = InferenceEngine.from_scenario(scenario, cfg)
+        step = scenario.make_step(engines[kp])
+        outs[kp] = np.asarray(step(scenario.payloads(rng_batch)))
+    assert engines["sparse"].packed.kernel_path == "sparse"
+    assert engines["onehot"].packed.kernel_path == "onehot"
+    np.testing.assert_array_equal(outs["sparse"], outs["onehot"])
+    np.testing.assert_array_equal(
+        outs["sparse"], scenario.reference_forward(rng_batch)
+    )
+
+
 # -----------------------------------------------------------------------
 # registry smoke: configs validate, arch modules import
 # -----------------------------------------------------------------------

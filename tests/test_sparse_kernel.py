@@ -1,0 +1,537 @@
+"""True-sparse gather/segment-sum kernel path (DESIGN.md §11).
+
+Bitwise parity of the forced-sparse pack against the forced-one-hot pack on
+every adversarial dedup shape (all-duplicate, all-unique, overflow spill,
+empty slots/padding cores, residency-cache hits, batch chunking), the
+pack/planner/engine plumbing and validation of ``kernel_path``, the analytic
+dense-vs-sparse crossover (including a hypothesis monotonicity property),
+the autotune ``kernel_path`` axis + the persistent :class:`TuningCache`,
+and the modeled auto-never-worse traffic account.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import (
+    PartitionedEmbeddingBag,
+    analytic_model,
+    autotune_block_sizes,
+    make_workload,
+)
+from repro.core.autotune import TuningCache, plan_shape_digest
+from repro.core.cost_model import TPU_V5E
+from repro.core.embedding import stack_indices
+from repro.core.partition import _local_asym_lookup, pack_plan
+from repro.core.planner import plan_asymmetric
+from repro.core.strategies import ChunkAssignment, Plan, Strategy
+from repro.core.traffic import modeled_kernel_path_traffic
+from repro.data.distributions import Uniform, Zipf, workload_probs
+
+E = 16
+
+
+def _small_model(l1_bytes=4096):
+    return analytic_model(dataclasses.replace(TPU_V5E, l1_bytes=l1_bytes))
+
+
+def _bag(wl, n_cores=2, l1_bytes=1 << 20, **planner_kwargs):
+    kwargs = dict(lif_threshold=1e9, rock_theta=None)
+    kwargs.update(planner_kwargs)
+    return PartitionedEmbeddingBag(
+        wl, n_cores=n_cores, planner="asymmetric",
+        cost_model=_small_model(l1_bytes), planner_kwargs=kwargs,
+    )
+
+
+def _fused_sum(bag, packed, sidx):
+    return np.asarray(
+        sum(
+            _local_asym_lookup(
+                packed.strip_core(c), sidx, n_tables=bag.n_tables,
+                use_kernels="fused",
+            )
+            for c in range(packed.n_cores)
+        )
+    )
+
+
+def _assert_paths_bitwise(bag, params, idx, **pack_kwargs):
+    """Forced-sparse pack == forced-one-hot pack bit for bit, and both match
+    the dense oracle."""
+    sidx = stack_indices(idx, bag.s_max)
+    onehot = bag.pack(params, kernel_path="onehot", **pack_kwargs)
+    sparse = bag.pack(params, kernel_path="sparse", **pack_kwargs)
+    assert onehot.kernel_path == "onehot"
+    assert sparse.kernel_path == "sparse"
+    assert int((np.asarray(sparse.step_kpath) == 1).sum()) > 0
+    got_onehot = _fused_sum(bag, onehot, sidx)
+    got_sparse = _fused_sum(bag, sparse, sidx)
+    np.testing.assert_array_equal(got_sparse, got_onehot)
+    want = np.asarray(bag.reference(params, idx))
+    np.testing.assert_allclose(got_sparse, want, rtol=1e-5, atol=1e-5)
+    return got_sparse
+
+
+# --------------------------------------------------------------------------
+# bitwise parity battery: sparse vs one-hot on adversarial dedup shapes
+# --------------------------------------------------------------------------
+
+
+def test_sparse_all_duplicate_batch():
+    """One unique id with multiplicity B·s: the sparse gather copies one row
+    and the shared segment-sum GEMM does all the work."""
+    wl = make_workload("sdup", [300, 40], dim=E, seqs=[4, 2], batch=16)
+    bag = _bag(wl)
+    params = bag.init(jax.random.PRNGKey(0))
+    idx = [jnp.full((wl.batch, t.seq), 7, jnp.int32) for t in wl.tables]
+    _assert_paths_bitwise(bag, params, idx, unique_cap=8)
+
+
+def test_sparse_all_unique_batch():
+    """Every lookup distinct: the gather loop copies cap rows per step."""
+    wl = make_workload("sunq", [300, 80], dim=E, seqs=[2, 1], batch=16)
+    bag = _bag(wl)
+    params = bag.init(jax.random.PRNGKey(1))
+    idx = [
+        jnp.asarray(
+            np.random.default_rng(i).permutation(t.rows)[
+                : wl.batch * t.seq
+            ].reshape(wl.batch, t.seq),
+            jnp.int32,
+        )
+        for i, t in enumerate(wl.tables)
+    ]
+    _assert_paths_bitwise(bag, params, idx, unique_cap=wl.batch * 2)
+
+
+def test_sparse_overflow_spills_to_cold():
+    """More distinct rows than unique_cap: the spill lookups take the cold
+    row-streaming path on both kernels, identically."""
+    wl = make_workload("sovf", [500], dim=E, seqs=[4], batch=32)
+    bag = _bag(wl, n_cores=1)
+    params = bag.init(jax.random.PRNGKey(2))
+    idx = [jax.random.randint(jax.random.PRNGKey(3), (32, 4), 0, 100)]
+    _assert_paths_bitwise(bag, params, idx, unique_cap=16)
+
+
+def test_sparse_empty_slot_and_padding_core():
+    """A core with zero slots + -1 sequence padding: all-padding schedules
+    and empty unique sets contribute exact zeros on the sparse path too."""
+    wl = make_workload("semp", [100], dim=E, seqs=[2], batch=8)
+    plan = Plan(
+        workload_name="semp", n_cores=2,
+        assignments=(ChunkAssignment(0, 0, 0, 100, Strategy.GM),),
+        symmetric_tables=(), symmetric_strategies=(),
+    )
+    plan.validate(wl.tables)
+    params = [jax.random.normal(jax.random.PRNGKey(0), (100, E), jnp.float32)]
+    idx = jax.random.randint(jax.random.PRNGKey(1), (wl.batch, 2), 0, 100)
+    sidx = stack_indices([idx], 2).at[0, :, 1].set(-1)
+    packs = {
+        kp: pack_plan(plan, wl.tables, params, unique_cap=16, kernel_path=kp)
+        for kp in ("onehot", "sparse")
+    }
+    empty = _local_asym_lookup(
+        packs["sparse"].strip_core(1), sidx, n_tables=1, use_kernels="fused"
+    )
+    np.testing.assert_array_equal(np.asarray(empty), 0.0)
+    got = {
+        kp: np.asarray(
+            sum(
+                _local_asym_lookup(
+                    p.strip_core(c), sidx, n_tables=1, use_kernels="fused"
+                )
+                for c in range(2)
+            )
+        )
+        for kp, p in packs.items()
+    }
+    np.testing.assert_array_equal(got["sparse"], got["onehot"])
+
+
+def test_sparse_with_residency_cache_hits():
+    """Dedup + hot-row cache + sparse gather compose: cached rows divert
+    before dedup on both paths, bit-identically."""
+    from repro.data.distributions import sample_workload
+
+    wl = make_workload("scch", [2000, 64, 300], dim=E, seqs=[4, 1, 2], batch=32)
+    plan = Plan(
+        workload_name="scch", n_cores=2,
+        assignments=(
+            ChunkAssignment(0, 0, 0, 1000, Strategy.GM),
+            ChunkAssignment(0, 1, 1000, 1000, Strategy.GM),
+            ChunkAssignment(1, 0, 0, 64, Strategy.L1_UB),
+            ChunkAssignment(2, 1, 0, 300, Strategy.GM_UB),
+        ),
+        symmetric_tables=(), symmetric_strategies=(),
+    )
+    plan.validate(wl.tables)
+    freqs = workload_probs(wl, Zipf(1.2))
+    params = [
+        jax.random.normal(jax.random.PRNGKey(6 + i), (t.rows, E), jnp.float32)
+        for i, t in enumerate(wl.tables)
+    ]
+    sidx = jnp.asarray(
+        sample_workload(np.random.default_rng(7), wl, Zipf(1.2), wl.batch)
+    )
+    got = {}
+    for kp in ("onehot", "sparse"):
+        packed = pack_plan(
+            plan, wl.tables, params, unique_cap=48, cache_rows=64,
+            freqs=freqs, kernel_path=kp,
+        )
+        assert int((np.asarray(packed.cache_remap) >= 0).sum()) > 0
+        got[kp] = np.asarray(
+            sum(
+                _local_asym_lookup(
+                    packed.strip_core(c), sidx, n_tables=3, use_kernels="fused"
+                )
+                for c in range(2)
+            )
+        )
+    np.testing.assert_array_equal(got["sparse"], got["onehot"])
+
+
+def test_sparse_under_batch_chunking():
+    """Forced block_b: every batch chunk re-runs the sparse gather against
+    its own window, matching the one-hot tiling bit for bit."""
+    wl = make_workload("schk", [400, 60], dim=E, seqs=[3, 1], batch=52)
+    bag = _bag(wl)
+    params = bag.init(jax.random.PRNGKey(4))
+    idx = [
+        jax.random.randint(jax.random.PRNGKey(5 + i), (wl.batch, t.seq), 0, 20)
+        for i, t in enumerate(wl.tables)
+    ]
+    _assert_paths_bitwise(bag, params, idx, block_b=16, unique_cap=24)
+
+
+# --------------------------------------------------------------------------
+# pack/planner plumbing + validation
+# --------------------------------------------------------------------------
+
+
+def test_pack_kernel_path_validation():
+    wl = make_workload("sval", [100], dim=E, batch=8)
+    plan = plan_asymmetric(wl, 1, _small_model(1 << 20), rock_theta=None)
+    with pytest.raises(ValueError, match="unknown kernel_path"):
+        pack_plan(plan, wl.tables, None, unique_cap=8, kernel_path="csr")
+    with pytest.raises(ValueError, match="unique_cap"):
+        pack_plan(plan, wl.tables, None, kernel_path="sparse")
+    with pytest.raises(ValueError, match="ragged"):
+        pack_plan(plan, wl.tables, None, layout="dense", kernel_path="sparse")
+    from repro.kernels.embedding_multi import multi_embedding_bag_ragged
+
+    with pytest.raises(ValueError, match="unique_cap"):
+        multi_embedding_bag_ragged(
+            jnp.zeros((4, E), jnp.float32),
+            jnp.zeros((1, 2, 2), jnp.int32),
+            jnp.zeros((1,), jnp.int32),
+            jnp.zeros((1,), jnp.int32),
+            jnp.zeros((1,), jnp.int32),
+            jnp.zeros((1,), jnp.int32),
+            block_r=4,
+            step_kpath=jnp.zeros((1,), jnp.int32),
+        )
+
+
+def test_pack_records_kernel_meta_and_resolution():
+    """plan.meta["kernel"]["packed"] carries the resolved path + step counts;
+    an all-one-hot resolution keeps kernel_path='onehot' (byte-identical
+    compiled graph to a pre-kernel-path pack)."""
+    wl = make_workload("smeta", [300, 40], dim=E, seqs=[2, 1], batch=16)
+    bag = _bag(wl)
+    params = bag.init(jax.random.PRNGKey(0))
+    sparse = bag.pack(params, unique_cap=16, kernel_path="sparse")
+    meta = bag.plan.meta["kernel"]["packed"]
+    assert meta["path"] == "sparse"
+    assert meta["sparse_steps"] == int((np.asarray(sparse.step_kpath) == 1).sum()) > 0
+    assert meta["sparse_chunks"] == len(bag.plan.assignments)
+    onehot = bag.pack(params, unique_cap=16, kernel_path="onehot")
+    meta = bag.plan.meta["kernel"]["packed"]
+    assert meta["path"] == "onehot" and meta["sparse_steps"] == 0
+    assert onehot.kernel_path == "onehot"
+    assert np.asarray(onehot.step_kpath).size == 0 or not (
+        np.asarray(onehot.step_kpath) == 1
+    ).any()
+    # auto on a dedup-less plan resolves all-one-hot (nothing to ride)
+    auto = bag.pack(params, kernel_path="auto")
+    assert auto.kernel_path == "onehot"
+
+
+def test_planner_kernel_path_choices():
+    """The planner prices both paths per chunk, picks the argmin under auto,
+    and validates forcing."""
+    model = _small_model(1 << 20)
+    wl = make_workload("splan", [200_000, 60], dim=E, seqs=[4, 1], batch=256)
+    freqs = workload_probs(wl, Zipf(1.2))
+    with pytest.raises(ValueError, match="unknown kernel_path"):
+        plan_asymmetric(wl, 2, model, kernel_path="csr")
+    with pytest.raises(ValueError, match="requires dedup"):
+        plan_asymmetric(wl, 2, model, kernel_path="sparse")
+    plan = plan_asymmetric(
+        wl, 2, model, freqs=freqs, dedup=True,
+        lif_threshold=1e9, rock_theta=None,
+    )
+    kern = plan.meta["kernel"]
+    assert kern["path"] == "auto" and kern["dedup_armed"] is True
+    assert len(kern["per_chunk"]) == len(plan.assignments)
+    assert kern["n_sparse"] + kern["n_onehot"] == len(kern["per_chunk"])
+    for rec in kern["per_chunk"]:
+        assert rec["onehot_us"] >= 0 and rec["sparse_us"] >= 0
+        want = "sparse" if rec["sparse_us"] < rec["onehot_us"] else "onehot"
+        assert rec["path"] == want
+    # the huge table's chunks sit far past the crossover: sparse wins there
+    assert kern["n_sparse"] > 0
+    # forcing overrides the argmin everywhere
+    forced = plan_asymmetric(
+        wl, 2, model, freqs=freqs, dedup=True, kernel_path="onehot",
+        lif_threshold=1e9, rock_theta=None,
+    )
+    assert forced.meta["kernel"]["n_sparse"] == 0
+    # without dedup, auto is all-one-hot even past the crossover
+    nodedup = plan_asymmetric(
+        wl, 2, model, freqs=freqs, lif_threshold=1e9, rock_theta=None
+    )
+    assert nodedup.meta["kernel"]["dedup_armed"] is False
+    assert nodedup.meta["kernel"]["n_sparse"] == 0
+
+
+# --------------------------------------------------------------------------
+# analytic crossover
+# --------------------------------------------------------------------------
+
+
+def test_cost_model_crossover_terms():
+    model = _small_model(1 << 20)
+    small = make_workload("sx", [256], dim=E, seqs=[4], batch=256).tables[0]
+    big = make_workload("bx", [50_000], dim=E, seqs=[4], batch=256).tables[0]
+    # tiny chunk: the one-hot GEMM amortizes, sparse's fixed overheads lose
+    path_s, costs_s = model.best_kernel_path(small, 256, 1)
+    assert path_s == "onehot"
+    # huge chunk: U·R one-hot work dwarfs U row copies
+    path_b, costs_b = model.best_kernel_path(big, 256, 1)
+    assert path_b == "sparse"
+    assert costs_b["onehot"] > costs_b["sparse"]
+    assert costs_b["onehot_bytes"] > costs_b["sparse_bytes"]
+    for key in ("onehot", "sparse", "onehot_bytes", "sparse_bytes",
+                "unique", "steps"):
+        assert costs_s[key] >= 0 and costs_b[key] >= 0
+    # expected unique is clamped by lookups and by chunk rows
+    u = model.expected_chunk_unique(big, 256, 1)
+    assert 0 < u <= min(256 * big.seq, big.rows)
+    assert model.expected_chunk_unique(big, 256, 1, row_range=(0, 8)) <= 8
+    # with a histogram, the chunk's share of mass bounds it
+    freq = Zipf(1.2).probs(big)
+    uh = model.expected_chunk_unique(big, 256, 1, freq, (0, big.rows))
+    assert 0 < uh <= 256 * big.seq * freq.range_mass(0, big.rows) + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(min_value=8, max_value=200_000),
+    seq=st.integers(min_value=1, max_value=8),
+)
+def test_crossover_monotone_single_flip(rows, seq):
+    """Along a growing batch ladder both modeled costs are nondecreasing
+    (more expected uniques can't make either gather cheaper) and the auto
+    pick flips at most once, one-hot -> sparse: the per-unique one-hot cost
+    scales with R while sparse's is flat, so once U is large enough to bury
+    sparse's fixed step overhead the ordering never reverses."""
+    model = _small_model(1 << 20)
+    table = make_workload(
+        "h", [rows], dim=E, seqs=[seq], batch=1
+    ).tables[0]
+    prev_onehot = prev_sparse = -1.0
+    paths = []
+    for batch in (1, 4, 16, 64, 256, 1024, 4096):
+        path, costs = model.best_kernel_path(table, batch, 1)
+        assert costs["onehot"] >= prev_onehot - 1e-12
+        assert costs["sparse"] >= prev_sparse - 1e-12
+        prev_onehot, prev_sparse = costs["onehot"], costs["sparse"]
+        paths.append(path)
+    flips = sum(a != b for a, b in zip(paths, paths[1:]))
+    assert flips <= 1
+    if flips:
+        assert paths[0] == "onehot" and paths[-1] == "sparse"
+
+
+# --------------------------------------------------------------------------
+# autotune axis + persistent tuning cache
+# --------------------------------------------------------------------------
+
+
+def test_autotune_sweeps_kernel_path():
+    wl = make_workload("stun", [2000, 64], dim=E, seqs=[2, 1], batch=16)
+    freqs = workload_probs(wl, Zipf(1.2))
+    bag = _bag(wl, freqs=freqs, dedup=True)
+    best = autotune_block_sizes(
+        bag.plan, wl.tables, batch=wl.batch, block_r_candidates=(64,),
+        kernel_path_candidates=("onehot", "sparse"), freqs=freqs, iters=1,
+    )
+    tuning = bag.plan.meta["tuning"]
+    assert {c["kernel_path"] for c in tuning["candidates"]} == {
+        "onehot", "sparse"
+    }
+    assert best["kernel_path"] in ("onehot", "sparse")
+    # sparse candidates are dropped wherever the combination has no dedup
+    autotune_block_sizes(
+        bag.plan, wl.tables, batch=wl.batch, block_r_candidates=(64,),
+        unique_cap_candidates=(0, 32),
+        kernel_path_candidates=("onehot", "sparse"), freqs=freqs, iters=1,
+    )
+    cands = bag.plan.meta["tuning"]["candidates"]
+    assert len(cands) == 3  # (0, onehot), (32, onehot), (32, sparse)
+    assert not any(
+        c["kernel_path"] == "sparse" and c["unique_cap"] == 0 for c in cands
+    )
+    with pytest.raises(ValueError, match="no feasible"):
+        autotune_block_sizes(
+            bag.plan, wl.tables, batch=wl.batch, block_r_candidates=(64,),
+            unique_cap_candidates=(0,), kernel_path_candidates=("sparse",),
+            iters=1,
+        )
+
+
+def test_tuning_cache_reuses_sweeps():
+    """Same plan shape + backend -> the second sweep is a pure cache hit
+    (identical best, no re-timing); a different batch misses."""
+    wl = make_workload("scache", [2000, 64], dim=E, seqs=[2, 1], batch=16)
+    freqs = workload_probs(wl, Zipf(1.2))
+    bag = _bag(wl, freqs=freqs, dedup=True)
+    cache = TuningCache()
+    kw = dict(block_r_candidates=(64, 128), freqs=freqs, iters=1, cache=cache)
+    best1 = autotune_block_sizes(bag.plan, wl.tables, batch=wl.batch, **kw)
+    assert bag.plan.meta["tuning"]["cache"]["hit"] is False
+    assert cache.stats() == {"entries": 1, "hits": 0, "misses": 1}
+    best2 = autotune_block_sizes(bag.plan, wl.tables, batch=wl.batch, **kw)
+    assert best2 == best1
+    assert bag.plan.meta["tuning"]["cache"]["hit"] is True
+    assert cache.hits == 1
+    # a shape change (different batch) is a miss, not a false hit
+    autotune_block_sizes(bag.plan, wl.tables, batch=wl.batch * 2, **kw)
+    assert cache.stats()["entries"] == 2 and cache.misses == 2
+    # JSON round-trip keeps the records usable
+    import json
+
+    blob = json.dumps(cache._store)
+    fresh = TuningCache()
+    fresh._store.update(json.loads(blob))
+    assert len(fresh) == 2
+
+
+def test_plan_shape_digest_sensitivity():
+    wl = make_workload("sdig", [2000, 64], dim=E, seqs=[2, 1], batch=16)
+    freqs = workload_probs(wl, Zipf(1.2))
+    plan = _bag(wl, freqs=freqs, dedup=True).plan
+    d1 = plan_shape_digest(plan, wl.tables, 16, "cpu")
+    assert d1 == plan_shape_digest(plan, wl.tables, 16, "cpu")
+    assert d1 != plan_shape_digest(plan, wl.tables, 32, "cpu")
+    assert d1 != plan_shape_digest(plan, wl.tables, 16, "tpu")
+    assert d1 != plan_shape_digest(plan, wl.tables, 16, "cpu", ((64,),))
+
+
+# --------------------------------------------------------------------------
+# engine surface
+# --------------------------------------------------------------------------
+
+
+def test_engine_kernel_path_validation():
+    from repro.engine import EngineConfig
+
+    with pytest.raises(ValueError, match="kernel_path"):
+        EngineConfig(kernel_path="csr").validate()
+    with pytest.raises(ValueError, match="dedup"):
+        EngineConfig(kernel_path="sparse").validate()
+    with pytest.raises(ValueError, match="dedup"):
+        EngineConfig(kernel_path="sparse", access="cache").validate()
+    EngineConfig(kernel_path="sparse", access="dedup").validate()
+    EngineConfig(kernel_path="sparse", access="full").validate()
+
+
+def test_engine_forced_paths_bitwise_and_reported():
+    """Engine-built lookups under forced sparse == forced one-hot bit for
+    bit; the choice lands in stats()["kernel"] and plan_report()."""
+    from repro.data.distributions import sample_workload
+    from repro.engine import EngineConfig, InferenceEngine
+
+    wl = make_workload("seng", [3000, 80], dim=E, seqs=[3, 1], batch=32)
+    tables = [
+        jnp.asarray(
+            np.random.default_rng(i).standard_normal((t.rows, t.dim)),
+            jnp.float32,
+        )
+        for i, t in enumerate(wl.tables)
+    ]
+    engines = {}
+    for kp in ("onehot", "sparse"):
+        cfg = EngineConfig(
+            access="dedup", distribution="zipf:1.2", kernel_path=kp,
+            n_cores=1,
+        )
+        engines[kp] = InferenceEngine.build(tables, wl, cfg)
+    sidx = jnp.asarray(
+        sample_workload(np.random.default_rng(3), wl, Zipf(1.2), wl.batch)
+    )
+    got = {
+        kp: np.asarray(eng.lookup(sidx)) for kp, eng in engines.items()
+    }
+    np.testing.assert_array_equal(got["sparse"], got["onehot"])
+    assert engines["sparse"].packed.kernel_path == "sparse"
+    stats = engines["sparse"].stats()
+    assert stats["kernel"]["path"] == "sparse"
+    assert stats["kernel"]["packed"]["sparse_steps"] > 0
+    report = engines["sparse"].plan_report()
+    assert "kernel=sparse" in report and "strategy=" in report
+
+
+def test_engine_rebuild_reuses_tuning_cache():
+    """A drift-style rebuild() under shape-preserving histograms hits the
+    engine's TuningCache instead of re-sweeping."""
+    from repro.engine import EngineConfig, InferenceEngine
+
+    wl = make_workload("srbt", [600, 60], dim=E, seqs=[2, 1], batch=8)
+    cfg = EngineConfig(
+        access="dedup", distribution="zipf:1.2", tuning="sweep", n_cores=1,
+    )
+    engine = InferenceEngine.build(None, wl, cfg)
+    assert engine.tuning_cache is not None
+    assert engine.stats()["tuning"]["cache"]["hit"] is False
+    rebuilt = engine.rebuild(engine.freqs)
+    assert rebuilt.tuning_cache is engine.tuning_cache
+    assert rebuilt.stats()["tuning"]["cache"]["hit"] is True
+    assert engine.tuning_cache.hits >= 1
+
+
+# --------------------------------------------------------------------------
+# modeled traffic: auto never worse than the better forced path
+# --------------------------------------------------------------------------
+
+
+def test_modeled_kernel_path_traffic_auto_never_worse():
+    model = _small_model(1 << 20)
+    wl = make_workload("strf", [200_000, 60], dim=E, seqs=[4, 1], batch=256)
+    freqs = workload_probs(wl, Zipf(1.2))
+    plan = plan_asymmetric(
+        wl, 2, model, freqs=freqs, dedup=True,
+        lif_threshold=1e9, rock_theta=None,
+    )
+    tr = modeled_kernel_path_traffic(plan, wl.tables, wl.batch, freqs,
+                                     model=model)
+    assert tr["auto_never_worse"] is True
+    assert tr["auto_us"] <= min(tr["onehot_us"], tr["sparse_us"]) + 1e-9
+    assert len(tr["per_chunk"]) == len(plan.assignments)
+    assert tr["n_sparse"] + tr["n_onehot"] == len(tr["per_chunk"])
+    assert tr["onehot_bytes"] > 0 and tr["sparse_bytes"] > 0
+    # uniform histograms behave too
+    uni = workload_probs(wl, Uniform())
+    plan_u = plan_asymmetric(
+        wl, 2, model, freqs=uni, dedup=True,
+        lif_threshold=1e9, rock_theta=None,
+    )
+    tr_u = modeled_kernel_path_traffic(plan_u, wl.tables, wl.batch, uni,
+                                       model=model)
+    assert tr_u["auto_never_worse"] is True
