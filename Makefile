@@ -27,12 +27,17 @@
 #                       trip), regenerating BENCH_models.json; bench-check
 #                       regenerates its fast smoke candidate and gates it
 #                       against the committed baseline
+#   make meshbench    — two-level mesh sweep (hosts x distribution: modeled
+#                       cross-host bytes vs flat all-gather + rejoin parity
+#                       per mesh shape), regenerating BENCH_mesh.json;
+#                       bench-check regenerates its fast smoke candidate
+#                       (modeled columns only) and gates it
 
 PY ?= python
 export PYTHONPATH := src
 
 .PHONY: test bench-check bench driftbench dedupbench servebench chaosbench \
-	modelbench tier1
+	modelbench meshbench tier1
 
 test:
 	$(PY) -m pytest -x -q
@@ -58,5 +63,8 @@ chaosbench:
 
 modelbench:
 	$(PY) benchmarks/modelbench.py
+
+meshbench:
+	$(PY) benchmarks/meshbench.py
 
 tier1: test bench-check

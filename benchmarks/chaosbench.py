@@ -96,7 +96,7 @@ def _build_engine(validation: str, *, drift: bool = False):
     config = EngineConfig(
         planner="asymmetric",
         use_kernels="xla",
-        n_cores=1,
+        mesh_shape=(1, 1),
         validation=validation,
         integrity="checksum",
         integrity_options={"check_every": CHECK_EVERY, "nan_guard": True},

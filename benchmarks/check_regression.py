@@ -85,6 +85,19 @@ the tolerance on any gated metric.  Two baselines are gated (see
   claims.  The candidate regenerates in fast smoke mode (``--no-measure``:
   modeled matrix only, no jit), so parity invariants are skipped there.
 
+``BENCH_mesh.json`` (meshbench two-level mesh sweep), when committed:
+
+* **cross-host bytes / flat all-gather bytes** per hosts x distribution
+  cell — deterministic modeled figures, gated up-only at ``--bytes-tol``;
+* **reduction factors** (``reduction_vs_flat``) — direction-flipped gate
+  (a shrink beyond tolerance fails);
+* **invariants** — single-host cells model zero cross-host bytes, zipf-1.2
+  beats the flat baseline >= 2x at >= 4 hosts, every multi-host cell
+  undercuts the flat baseline, hierarchical bytes flat in batch past dedup
+  saturation, plus (measured mode only) per-mesh-shape rejoin parity and
+  zero cross-host ``all_to_all`` sends.  The candidate regenerates in fast
+  smoke mode (``measure=False``: modeled columns only, no packing).
+
 Wired into ``make bench-check`` (the tier-1 flow's companion target).
 """
 from __future__ import annotations
@@ -102,6 +115,7 @@ _DEDUP_BASELINE = _REPO_ROOT / "BENCH_dedup.json"
 _SERVING_BASELINE = _REPO_ROOT / "BENCH_serving.json"
 _CHAOS_BASELINE = _REPO_ROOT / "BENCH_chaos.json"
 _MODELS_BASELINE = _REPO_ROOT / "BENCH_models.json"
+_MESH_BASELINE = _REPO_ROOT / "BENCH_mesh.json"
 
 _BYTES_KEYS = ("chunk_bytes",)
 _TRAFFIC_PATHS = ("fused", "xla_gather")
@@ -478,6 +492,63 @@ def compare_models(
     return failures
 
 
+# parity/send-map invariants only exist when meshbench ran in full
+# (measured) mode; the smoke-mode candidate the gate regenerates skips them.
+_MESH_MEASURED_INVARIANTS = ("parity_ok", "cross_host_sends_zero")
+
+
+def _mesh_cells(record: dict) -> dict[str, dict]:
+    """meshbench record -> {``<hosts>h.<distribution>``: cell}."""
+    return {
+        f"{c['hosts']}h.{c['distribution']}": c
+        for c in record.get("cells", [])
+    }
+
+
+def compare_mesh(
+    baseline: dict, candidate: dict, *, tol: float = 0.20
+) -> list[str]:
+    """Mesh-bench gate: cross-host byte growth per hosts x distribution
+    cell (up-only), collapsed reduction-vs-flat factors (direction-flipped),
+    and flipped invariants (measured-only ones skipped for smoke
+    candidates)."""
+    failures: list[str] = []
+    base, cand = _mesh_cells(baseline), _mesh_cells(candidate)
+    measured = "measured" in candidate
+    for name, b in sorted(base.items()):
+        c = cand.get(name)
+        if c is None:
+            failures.append(f"mesh.{name}: missing from candidate")
+            continue
+        for k in ("cross_host_bytes", "flat_allgather_bytes"):
+            bv, cv = float(b.get(k, 0)), float(c.get(k, 0))
+            if bv > 0 and cv > bv * (1.0 + tol):
+                failures.append(
+                    f"mesh.{name}.{k}: {cv:.0f} vs baseline {bv:.0f} "
+                    f"(+{(cv / bv - 1) * 100:.1f}% > {tol * 100:.0f}% tol)"
+                )
+            if bv == 0 and cv > 0:  # single-host cells must stay at zero
+                failures.append(
+                    f"mesh.{name}.{k}: {cv:.0f} vs zero baseline"
+                )
+        bv = float(b.get("reduction_vs_flat", 0))
+        cv = float(c.get("reduction_vs_flat", 0))
+        if bv > 1.0 and cv < bv * (1.0 - tol):
+            failures.append(
+                f"mesh.{name}.reduction_vs_flat: {cv:.2f}x vs baseline "
+                f"{bv:.2f}x ({(cv / bv - 1) * 100:.1f}% < -{tol * 100:.0f}% "
+                "tol)"
+            )
+    for k, v in baseline.get("invariants", {}).items():
+        if not v:
+            continue
+        if k in _MESH_MEASURED_INVARIANTS and not measured:
+            continue  # candidate ran in fast smoke mode (modeled only)
+        if not candidate.get("invariants", {}).get(k, False):
+            failures.append(f"mesh invariant {k!r}: true in baseline, now false")
+    return failures
+
+
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--baseline", type=Path, default=_BASELINE)
@@ -528,6 +599,14 @@ def main(argv=None) -> int:
     )
     p.add_argument("--skip-models", action="store_true",
                    help="skip the scenario-matrix bench gate")
+    p.add_argument("--baseline-mesh", type=Path, default=_MESH_BASELINE)
+    p.add_argument(
+        "--candidate-mesh", type=Path, default=None,
+        help="mesh bench JSON to check; omitted = regenerate in fast smoke "
+             "mode (modeled columns only) when the baseline exists",
+    )
+    p.add_argument("--skip-mesh", action="store_true",
+                   help="skip the two-level mesh bench gate")
     args = p.parse_args(argv)
 
     baseline = json.loads(args.baseline.read_text())
@@ -662,6 +741,28 @@ def main(argv=None) -> int:
                 print(
                     f"[bench-check] models.{name}: bytes={cv:.0f} "
                     f"({delta:+.1f}%) p99={mc[name]['modeled_p99_us']:.2f}us"
+                )
+
+    if not args.skip_mesh and args.baseline_mesh.exists():
+        mesh_base = json.loads(args.baseline_mesh.read_text())
+        if args.candidate_mesh is not None:
+            mesh_cand = json.loads(args.candidate_mesh.read_text())
+        else:
+            sys.path.insert(0, str(_REPO_ROOT))
+            from benchmarks.meshbench import run as mesh_run
+
+            tmp = Path(tempfile.mkstemp(suffix=".json")[1])
+            mesh_cand = mesh_run(measure=False, csv=False, out_path=tmp)
+            print(f"[bench-check] regenerated mesh candidate -> {tmp}")
+        failures += compare_mesh(mesh_base, mesh_cand, tol=args.bytes_tol)
+        hb, hc = _mesh_cells(mesh_base), _mesh_cells(mesh_cand)
+        for name in sorted(hb):
+            if name in hc:
+                c = hc[name]
+                print(
+                    f"[bench-check] mesh.{name}: "
+                    f"cross_host={c['cross_host_bytes'] / 1e6:.3f}MB "
+                    f"reduction={c['reduction_vs_flat']:.2f}x"
                 )
 
     if failures:

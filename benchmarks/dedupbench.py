@@ -185,7 +185,8 @@ def measured_matrix(batch: int = 128, iters: int = 2, seed: int = 0) -> dict:
             planner="asymmetric",
             planner_options={"lif_threshold": 1e9, "rock_theta": None},
             hardware_options={"l1_bytes": 64 << 10, "dma_latency": 1e-8},
-            n_cores=2,
+            mesh_shape=(1, 2),
+            simulate=True,  # modeled matrix: per-core loops, no mesh exec
         ),
         rng=jax.random.PRNGKey(seed),
     )

@@ -172,7 +172,7 @@ def served_matrix(
             planner="asymmetric",
             use_kernels="xla",
             hardware_options={"l1_bytes": 64 << 10, "dma_latency": 1e-8},
-            n_cores=jax.device_count(),
+            mesh_shape=(1, jax.device_count()),
             drift="replan" if mode == "replanned" else "none",
             drift_options=(
                 {"check_every": 2, "patience": 2, "cooldown": 4}

@@ -99,17 +99,17 @@ def _configs(name: str, spec: str, n_cores: int) -> dict[str, EngineConfig]:
     """The three policy EngineConfigs for one (model, distribution) cell."""
     return {
         "baseline": EngineConfig(
-            model=name, planner="asymmetric", n_cores=n_cores,
-            hardware_options=dict(_HW),
+            model=name, planner="asymmetric", mesh_shape=(1, n_cores),
+            simulate=True, hardware_options=dict(_HW),
         ),
         "dedup-cache": EngineConfig(
             model=name, planner="asymmetric", access="full",
-            distribution=spec, n_cores=n_cores,
-            hardware_options=dict(_HW),
+            distribution=spec, mesh_shape=(1, n_cores),
+            simulate=True, hardware_options=dict(_HW),
         ),
         "drift-replan": EngineConfig(
             model=name, planner="asymmetric", drift="replan",
-            n_cores=n_cores, hardware_options=dict(_HW),
+            mesh_shape=(1, n_cores), simulate=True, hardware_options=dict(_HW),
         ),
     }
 

@@ -33,7 +33,7 @@ def main():
     for planner in ("baseline", "symmetric", "asymmetric"):
         config = EngineConfig(
             planner=planner,
-            n_cores=4,
+            mesh_shape=(1, 4),
             # tiny L1 to exercise chunking (the quickstart's classic knob)
             hardware_options={"l1_bytes": 4096},
         )

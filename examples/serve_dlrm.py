@@ -46,7 +46,7 @@ def main():
     for planner in ("symmetric", "asymmetric"):
         config = EngineConfig(
             planner=planner,
-            n_cores=4,
+            mesh_shape=(1, 4),
             hardware_options={"l1_bytes": 8192},
             max_batch=args.batch,
             max_wait_s=0.001,

@@ -109,6 +109,11 @@ class HardwareSpec:
     vector_flops: float  # per-core vector unit ops/s (elementwise)
     matmul_flops: float  # per-core MXU/cube flops/s (for one-hot lookups)
     link_bw: float = 50e9  # bytes/s per inter-chip link (pods)
+    # cross-host (NIC/DCN) bandwidth per host: the two-level mesh's second,
+    # slower interconnect tier (~100 Gb/s Ethernet/ICI-DCN).  The asymmetry
+    # link_bw >> host_link_bw is what makes host-local placement matter.
+    host_link_bw: float = 12.5e9
+    host_link_latency: float = 5e-6  # seconds per cross-host collective hop
 
     @property
     def hbm_bw_per_core(self) -> float:
@@ -279,6 +284,18 @@ class CostModel:
     def fits_l1(self, table: TableSpec, rows: int | None = None) -> bool:
         rows = table.rows if rows is None else rows
         return rows * table.row_bytes <= self.hardware.l1_bytes
+
+    def cross_host_time(self, nbytes: float, hosts: int = 2) -> float:
+        """Modeled wall time of the two-level mesh's one cross-host
+        collective: a ring all-gather of the per-host owner buckets over the
+        slow inter-host tier (DESIGN.md §12).  ``nbytes`` is the total
+        payload crossing host boundaries; a single host pays nothing."""
+        if hosts <= 1 or nbytes <= 0:
+            return 0.0
+        return (
+            (hosts - 1) * self.hardware.host_link_latency
+            + nbytes / self.hardware.host_link_bw
+        )
 
     # -- kernel-path (dense-vs-sparse gather) crossover ---------------------
 

@@ -46,11 +46,13 @@ from repro.core.tables import TableSpec, Workload
 
 __all__ = [
     "PLANNERS",
+    "kernel_meta",
     "plan_asymmetric",
     "plan_baseline",
     "plan_symmetric",
     "predicted_p99",
     "select_access_reduction",
+    "size_unique_cap",
 ]
 
 
@@ -173,6 +175,73 @@ def select_access_reduction(
         "cache_target": float(cache_target),
         "coverage": coverage,
         "unique_cap": 0,
+    }
+
+
+def size_unique_cap(
+    tables: Sequence[TableSpec],
+    batch: int,
+    assignments: Sequence[ChunkAssignment],
+    freqs=None,
+) -> int:
+    """unique_cap sizing shared by the flat and hierarchical planners: max
+    expected unique rows over the placed chunks with 25% headroom (overflow
+    spills to the cold path, so the cap bounds memory, not correctness),
+    clamped at each chunk's hard ceiling ``min(rows, lookups)``.  Sized
+    WITHOUT the cache exclusion so a cold cache (post-swap, pre-warm) still
+    dedups within budget."""
+    cap = 8.0
+    for a in assignments:
+        t = tables[a.table_idx]
+        f = _uniform_or(freq_of(freqs, a.table_idx), t.rows)
+        n = batch * t.seq / max(a.replicas, 1)
+        u = f.expected_unique(a.row_offset, a.row_offset + a.rows, n)
+        cap = max(cap, min(1.25 * u, float(a.rows), n))
+    return int(-(-int(cap) // 8) * 8)
+
+
+def kernel_meta(
+    tables: Sequence[TableSpec],
+    batch: int,
+    assignments: Sequence[ChunkAssignment],
+    model: CostModel,
+    freqs,
+    kernel_path: str,
+    dedup_armed: bool,
+) -> dict:
+    """Per-chunk gather-path choice (DESIGN.md §11), shared by the flat and
+    hierarchical planners: price the dedup'd unique-row gather both ways for
+    every placed chunk; without dedup the sparse path has no uniq/cnt
+    machinery to ride, so auto is all-one-hot (the records still carry both
+    modeled costs for reporting)."""
+    per_chunk = []
+    n_sparse = 0
+    for a in assignments:
+        chunk_tab = dataclasses.replace(tables[a.table_idx], rows=a.rows)
+        eff_batch = batch // max(a.replicas, 1)
+        auto_path, kcosts = model.best_kernel_path(
+            chunk_tab, eff_batch, 1, freq_of(freqs, a.table_idx),
+            (a.row_offset, a.row_offset + a.rows),
+        )
+        if kernel_path == "auto":
+            path = auto_path if dedup_armed else "onehot"
+        else:
+            path = kernel_path
+        n_sparse += path == "sparse"
+        per_chunk.append({
+            "table": a.table_idx,
+            "core": a.core,
+            "rows": a.rows,
+            "path": path,
+            "onehot_us": kcosts["onehot"] * 1e6,
+            "sparse_us": kcosts["sparse"] * 1e6,
+        })
+    return {
+        "path": kernel_path,
+        "dedup_armed": dedup_armed,
+        "per_chunk": per_chunk,
+        "n_sparse": int(n_sparse),
+        "n_onehot": len(per_chunk) - int(n_sparse),
     }
 
 
@@ -660,54 +729,12 @@ def plan_asymmetric(
                 load[c] += rep_cost
 
     if access is not None and access["dedup"]:
-        # unique_cap: max expected unique rows over the placed chunks with
-        # 25% headroom (overflow spills to the cold path, so the cap bounds
-        # memory, not correctness), clamped at each chunk's hard ceiling
-        # min(rows, lookups).  Sized WITHOUT the cache exclusion so a cold
-        # cache (post-swap, pre-warm) still dedups within budget.
-        cap = 8.0
-        for a in assignments:
-            t = tables[a.table_idx]
-            f = _uniform_or(freq_of(freqs, a.table_idx), t.rows)
-            n = batch * t.seq / max(a.replicas, 1)
-            u = f.expected_unique(a.row_offset, a.row_offset + a.rows, n)
-            cap = max(cap, min(1.25 * u, float(a.rows), n))
-        access["unique_cap"] = int(-(-int(cap) // 8) * 8)
+        access["unique_cap"] = size_unique_cap(tables, batch, assignments, freqs)
 
-    # per-chunk gather-path choice (DESIGN.md §11): price the dedup'd
-    # unique-row gather both ways for every placed chunk; without dedup the
-    # sparse path has no uniq/cnt machinery to ride, so auto is all-one-hot
-    # (the records still carry both modeled costs for reporting).
     dedup_armed = bool(access is not None and access["dedup"])
-    per_chunk = []
-    n_sparse = 0
-    for a in assignments:
-        chunk_tab = dataclasses.replace(tables[a.table_idx], rows=a.rows)
-        eff_batch = batch // max(a.replicas, 1)
-        auto_path, kcosts = model.best_kernel_path(
-            chunk_tab, eff_batch, 1, freq_of(freqs, a.table_idx),
-            (a.row_offset, a.row_offset + a.rows),
-        )
-        if kernel_path == "auto":
-            path = auto_path if dedup_armed else "onehot"
-        else:
-            path = kernel_path
-        n_sparse += path == "sparse"
-        per_chunk.append({
-            "table": a.table_idx,
-            "core": a.core,
-            "rows": a.rows,
-            "path": path,
-            "onehot_us": kcosts["onehot"] * 1e6,
-            "sparse_us": kcosts["sparse"] * 1e6,
-        })
-    kernel_meta = {
-        "path": kernel_path,
-        "dedup_armed": dedup_armed,
-        "per_chunk": per_chunk,
-        "n_sparse": int(n_sparse),
-        "n_onehot": len(per_chunk) - int(n_sparse),
-    }
+    kmeta = kernel_meta(
+        tables, batch, assignments, model, freqs, kernel_path, dedup_armed
+    )
 
     plan = Plan(
         workload_name=workload.name,
@@ -728,13 +755,22 @@ def plan_asymmetric(
     )
     if access is not None:
         plan.meta["cache"] = access
-    plan.meta["kernel"] = kernel_meta
+    plan.meta["kernel"] = kmeta
     plan.validate(tables)
     return plan
+
+
+def _plan_hierarchical_lazy(workload, n_cores, model, **kw):
+    # late import: mesh.py builds on plan_asymmetric, so importing it at
+    # module load would be circular.
+    from repro.core.mesh import plan_hierarchical
+
+    return plan_hierarchical(workload, n_cores, model, **kw)
 
 
 PLANNERS = {
     "baseline": plan_baseline,
     "symmetric": plan_symmetric,
     "asymmetric": plan_asymmetric,
+    "hierarchical": _plan_hierarchical_lazy,
 }

@@ -186,7 +186,7 @@ class _PlannerPlacement:
         return PLANNERS[self.planner_name](workload, n_cores, model, **options)
 
 
-for _name in ("baseline", "symmetric", "asymmetric"):
+for _name in ("baseline", "symmetric", "asymmetric", "hierarchical"):
     PLACEMENT_POLICIES.register(
         _name, (lambda n: lambda: _PlannerPlacement(n))(_name)
     )
@@ -380,7 +380,17 @@ class EngineConfig:
     hardware: str = "tpu_v5e"
     hardware_options: dict = dataclasses.field(default_factory=dict)
     dtype: str = "float32"
-    n_cores: int | None = None  # None = jax.device_count()
+    n_cores: int | None = None  # deprecated: use mesh_shape (None = devices)
+    # two-level mesh (DESIGN.md §12): (hosts, cores_per_host).  None falls
+    # back to n_cores as (1, n_cores) — the flat single-host mesh — with a
+    # DeprecationWarning when n_cores was set explicitly.  The planner sees
+    # hosts * cores_per_host cores; the "hierarchical" planner additionally
+    # keeps each un-sharded table's cores on one host.
+    mesh_shape: tuple | list | None = None
+    # simulate=True skips the plan-cores == device-mesh check at build time
+    # so plan/model-only work (benches, reports) can study a 4x8 mesh on one
+    # CPU device.  Execution entry points still raise MeshShapeError.
+    simulate: bool = False
     # serving (DESIGN.md §8): batching + admission control + deadlines +
     # degraded-mode fault containment
     max_batch: int = 256
@@ -392,6 +402,12 @@ class EngineConfig:
     degrade_after: int = 3  # consecutive batch failures before degraded
     #   mode (0 disables the fallback path entirely)
     probe_every: int = 4  # degraded-mode primary-probe cadence
+
+    def __post_init__(self) -> None:
+        # JSON round-trips deliver mesh_shape as a list; normalize so a
+        # loaded config compares equal to the one that was saved
+        if self.mesh_shape is not None:
+            self.mesh_shape = tuple(self.mesh_shape)
 
     def validate(self) -> None:
         if self.layout not in ("ragged", "dense"):
@@ -455,12 +471,21 @@ class EngineConfig:
                     "kernel_path='sparse' requires access='dedup' or 'full' "
                     "(the sparse gather rides the dedup machinery)"
                 )
+        if self.mesh_shape is not None:
+            from repro.core.mesh import resolve_mesh_shape
+
+            # raises MeshShapeError on bad geometry / n_cores disagreement
+            resolve_mesh_shape(self.mesh_shape, self.n_cores, warn=False)
         if self.access != "none":
             # same constraints the serve CLI enforced: the access-reduction
             # subsystem lives in the fused ragged executor and its knobs are
-            # planner kwargs only plan_asymmetric accepts.
-            if self.planner != "asymmetric":
-                raise ValueError("access reduction requires planner='asymmetric'")
+            # planner kwargs only plan_asymmetric (and the hierarchical
+            # planner, which delegates to it per host) accepts.
+            if self.planner not in ("asymmetric", "hierarchical"):
+                raise ValueError(
+                    "access reduction requires planner='asymmetric' or "
+                    "'hierarchical'"
+                )
             if self.layout != "ragged":
                 raise ValueError("access reduction requires layout='ragged'")
             if self.use_kernels != "fused":
@@ -604,10 +629,16 @@ class InferenceEngine:
         from repro.core.cost_model import analytic_model
         from repro.core.embedding import PartitionedEmbeddingBag
 
+        from repro.core.mesh import MeshShapeError, resolve_mesh_shape
+
         config = config if config is not None else EngineConfig()
         config.validate()
 
-        n_cores = config.n_cores or jax.device_count()
+        hosts, cores_per_host = resolve_mesh_shape(
+            config.mesh_shape, config.n_cores,
+            default_cores=jax.device_count(),
+        )
+        n_cores = hosts * cores_per_host
         hw = _hardware_presets()[config.hardware]
         if config.hardware_options:
             hw = _dc.replace(hw, **config.hardware_options)
@@ -633,11 +664,13 @@ class InferenceEngine:
         planner_kwargs.update(access.planner_kwargs(**config.access_options))
         if freqs is not None:
             planner_kwargs["freqs"] = freqs
-        if config.planner == "asymmetric":
+        if config.planner in ("asymmetric", "hierarchical"):
             # the per-chunk dense-vs-sparse crossover choice is priced by
             # the planner and recorded in plan.meta["kernel"]; pack reads
             # it back when no explicit kernel_path is given.
             planner_kwargs.setdefault("kernel_path", config.kernel_path)
+        if config.planner == "hierarchical":
+            planner_kwargs.setdefault("hosts", hosts)
 
         import jax.numpy as jnp
 
@@ -677,6 +710,18 @@ class InferenceEngine:
 
         if mesh is None:
             mesh = compat.make_mesh((1, jax.device_count()), ("data", "model"))
+        axis_size = dict(mesh.shape).get("model", 1)
+        if n_cores != axis_size and not config.simulate:
+            raise MeshShapeError(
+                f"plan spans {n_cores} cores (mesh_shape {hosts}x"
+                f"{cores_per_host}) but the device mesh 'model' axis has "
+                f"{axis_size} device(s) (jax.device_count()="
+                f"{jax.device_count()}); either run under a matching device "
+                f"mesh (e.g. XLA_FLAGS=--xla_force_host_platform_device_"
+                f"count={n_cores}), set mesh_shape=(1, {axis_size}), or pass "
+                "simulate=True for plan/model-only work (execution will "
+                "still raise)"
+            )
         return cls(
             config=config,
             workload=workload,
@@ -828,10 +873,31 @@ class InferenceEngine:
     def _use_kernels(self):
         return "fused" if self.config.use_kernels == "fused" else False
 
+    def _require_executable(self) -> None:
+        """Raise when the plan spans more cores than the device mesh holds.
+
+        ``simulate=True`` builds are plan/model-only artifacts: shard_map
+        over an undersized mesh would silently hand each device the *full*
+        stacked buffers and drop every core's partial but core 0's — the
+        exact silent-fallback bug this check closes (DESIGN.md §12)."""
+        from repro.core.mesh import MeshShapeError
+
+        axis_size = dict(self.mesh.shape).get("model", 1)
+        if self.packed.n_cores != axis_size:
+            raise MeshShapeError(
+                f"cannot execute: plan spans {self.packed.n_cores} cores but "
+                f"the device mesh 'model' axis has {axis_size} device(s) — "
+                "this engine was built with simulate=True for plan/model "
+                "work; to run lookups, rebuild under a matching device mesh "
+                "(e.g. XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{self.packed.n_cores})"
+            )
+
     def lookup(self, indices) -> Any:
         """Partitioned pooled lookup: per-table index arrays (or the stacked
         (N, B, s_max) tensor with ``-1`` padding) → (N, B, E).  Exactly
         ``bag.apply`` under the config's executor knobs — jit-able."""
+        self._require_executable()
         return self.bag.apply(
             self.packed,
             indices,
@@ -1026,12 +1092,85 @@ class InferenceEngine:
             "layout": self.bag.layout_summary(),
             "config": self.config.to_dict(),
         }
-        for key in ("cache", "tuning", "distribution", "kernel"):
+        for key in ("cache", "tuning", "distribution", "kernel", "mesh"):
             if plan.meta.get(key) is not None:
                 out[key] = plan.meta[key]
+        mesh_meta = plan.meta.get("mesh") or {}
+        out["mesh_shape"] = [
+            int(mesh_meta.get("hosts", 1)),
+            int(mesh_meta.get("cores_per_host", plan.n_cores)),
+        ]
+        if out["mesh_shape"][0] > 1:
+            from repro.core.traffic import modeled_cross_host_traffic
+
+            xh = modeled_cross_host_traffic(
+                plan, self.workload.tables, self.workload.batch, self.freqs
+            )
+            out["cross_host"] = {
+                k: xh[k] for k in (
+                    "cross_host_bytes", "flat_allgather_bytes",
+                    "reduction_vs_flat", "bucket_entries", "unique_cap",
+                )
+            }
         if self._server is not None:
             out["server"] = self._server.stats()
         return out
+
+    def _placement_tree(self, kern: dict) -> list[str]:
+        """Placement as a host → core → chunk tree with per-level modeled
+        bytes (DESIGN.md §12): each chunk line carries its modeled HBM
+        lookup bytes, each core and host line the sum over its children,
+        and on a multi-host mesh each host line adds the bytes its owner
+        buckets put on the cross-host wire."""
+        from repro.core.traffic import (
+            modeled_cross_host_traffic,
+            modeled_plan_traffic,
+        )
+
+        plan = self.plan
+        tables = self.workload.tables
+        batch = self.workload.batch
+        traffic = modeled_plan_traffic(plan, tables, batch, self.freqs)
+        chunk_bytes = traffic["per_chunk_bytes"]
+        mesh_meta = plan.meta.get("mesh") or {}
+        hosts = int(mesh_meta.get("hosts", 1))
+        cph = int(mesh_meta.get("cores_per_host", plan.n_cores))
+        xh = (
+            modeled_cross_host_traffic(plan, tables, batch, self.freqs)
+            if hosts > 1 else None
+        )
+
+        recs = list(zip(plan.assignments, kern["per_chunk"], chunk_bytes))
+        lines: list[str] = []
+        for h in range(hosts):
+            host_recs = [r for r in recs if r[0].core // cph == h]
+            host_bytes = sum(b for *_, b in host_recs)
+            host_line = (
+                f"  host {h}: {len(host_recs)} chunks, "
+                f"modeled lookup {host_bytes:,}B"
+            )
+            if xh is not None:
+                host_line += (
+                    f", cross-host {xh['per_host_bytes'][h]:,.0f}B"
+                )
+            lines.append(host_line)
+            for core in sorted({r[0].core for r in host_recs}):
+                core_recs = [r for r in host_recs if r[0].core == core]
+                core_bytes = sum(b for *_, b in core_recs)
+                lines.append(
+                    f"    core {core}: {len(core_recs)} chunks, "
+                    f"modeled lookup {core_bytes:,}B"
+                )
+                for a, rec, b in core_recs:
+                    strat = getattr(a.strategy, "name", str(a.strategy))
+                    lines.append(
+                        f"      chunk table={rec['table']} "
+                        f"rows={rec['rows']} strategy={strat} "
+                        f"kernel={rec['path']} "
+                        f"(modeled onehot {rec['onehot_us']:.2f}us / "
+                        f"sparse {rec['sparse_us']:.2f}us, lookup {b:,}B)"
+                    )
+        return lines
 
     def plan_report(self) -> str:
         """Human-readable build report (what ``launch/serve.py`` prints)."""
@@ -1073,19 +1212,21 @@ class InferenceEngine:
                 f"kernel path={kern['path']} "
                 f"({kern['n_sparse']} sparse / {kern['n_onehot']} one-hot chunks)"
             )
-            for a, rec in zip(self.plan.assignments, kern["per_chunk"]):
-                strat = getattr(a.strategy, "name", str(a.strategy))
-                lines.append(
-                    f"  chunk core={rec['core']} table={rec['table']} "
-                    f"rows={rec['rows']} strategy={strat} "
-                    f"kernel={rec['path']} "
-                    f"(modeled onehot {rec['onehot_us']:.2f}us / "
-                    f"sparse {rec['sparse_us']:.2f}us)"
-                )
+            lines.extend(self._placement_tree(kern))
         lines.append(
             f"executor kernels={self.config.use_kernels} "
             f"reduce={self.config.reduce_mode} layout={self.config.layout}"
         )
+        xh = s.get("cross_host")
+        if xh:
+            h, c = s["mesh_shape"]
+            lines.append(
+                f"mesh {h}x{c} (hosts x cores/host): modeled cross-host "
+                f"{xh['cross_host_bytes']:,.0f}B vs flat all-gather "
+                f"{xh['flat_allgather_bytes']:,.0f}B "
+                f"({xh['reduction_vs_flat']:.1f}x reduction, "
+                f"{xh['bucket_entries']} bucket entries)"
+            )
         if self.config.drift != "none":
             lines.append(f"drift policy={self.config.drift} "
                          f"{self.config.drift_options}")

@@ -75,7 +75,7 @@ def test_engine_matches_manual_chain(wl, params, mesh, spec, dist):
     ref = np.asarray(bag.apply(packed, idx, mesh=mesh))
 
     engine = InferenceEngine.build(
-        params, wl, EngineConfig(distribution=spec, n_cores=1), mesh=mesh
+        params, wl, EngineConfig(distribution=spec, mesh_shape=(1, 1)), mesh=mesh
     )
     out = np.asarray(engine.lookup(idx))
     assert np.array_equal(out, ref)
@@ -94,7 +94,7 @@ def test_engine_matches_manual_chain_with_access_reduction(wl, params, mesh):
 
     engine = InferenceEngine.build(
         params, wl,
-        EngineConfig(distribution="zipf:1.2", access="full", n_cores=1),
+        EngineConfig(distribution="zipf:1.2", access="full", mesh_shape=(1, 1)),
         mesh=mesh,
     )
     assert np.array_equal(np.asarray(engine.lookup(idx)), ref)
@@ -103,16 +103,16 @@ def test_engine_matches_manual_chain_with_access_reduction(wl, params, mesh):
 
 def test_engine_abstract_and_fresh_tables(wl, mesh):
     eng = InferenceEngine.build(
-        "abstract", wl, EngineConfig(n_cores=1), mesh=mesh
+        "abstract", wl, EngineConfig(mesh_shape=(1, 1)), mesh=mesh
     )
     assert eng.table_data is None
     eng2 = InferenceEngine.build(
-        None, wl, EngineConfig(n_cores=1), mesh=mesh,
+        None, wl, EngineConfig(mesh_shape=(1, 1)), mesh=mesh,
         rng=jax.random.PRNGKey(7),
     )
     assert len(eng2.table_data) == len(wl.tables)
     with pytest.raises(ValueError, match="unknown tables spec"):
-        InferenceEngine.build("bogus", wl, EngineConfig(n_cores=1))
+        InferenceEngine.build("bogus", wl, EngineConfig(mesh_shape=(1, 1)))
 
 
 # -----------------------------------------------------------------------
@@ -125,7 +125,7 @@ def test_config_json_roundtrip_identical_plan(wl, params, mesh, tmp_path):
     including plan.meta['cache'] and plan.meta['distribution']."""
     config = EngineConfig(
         distribution="zipf:1.2", access="full",
-        access_options={"cache_target": 0.6}, n_cores=1,
+        access_options={"cache_target": 0.6}, mesh_shape=(1, 1),
         planner_options={"lpt": True},
     )
     path = tmp_path / "engine.json"
@@ -199,7 +199,7 @@ def test_custom_placement_policy_registration(wl, params, mesh):
     try:
         eng = InferenceEngine.build(
             params, wl,
-            EngineConfig(planner="test-symmetric", n_cores=1), mesh=mesh,
+            EngineConfig(planner="test-symmetric", mesh_shape=(1, 1)), mesh=mesh,
         )
         assert eng.plan.meta["planner"] == "symmetric"
         assert len(eng.plan.assignments) == 0
@@ -233,7 +233,7 @@ def test_registry_decorator_and_bad_name():
 
 def test_request_level_serving_handles(wl, params, mesh):
     engine = InferenceEngine.build(
-        params, wl, EngineConfig(n_cores=1, max_wait_s=0.0), mesh=mesh
+        params, wl, EngineConfig(mesh_shape=(1, 1), max_wait_s=0.0), mesh=mesh
     )
     idx = np.asarray(_indices(wl, Zipf(1.2), batch=8))
     expected = np.asarray(engine.lookup(jax.numpy.asarray(idx)))
@@ -257,7 +257,7 @@ def test_request_level_serving_handles(wl, params, mesh):
 
 def test_request_handle_split_error(wl, params, mesh):
     engine = InferenceEngine.build(
-        params, wl, EngineConfig(n_cores=1, max_wait_s=0.0), mesh=mesh
+        params, wl, EngineConfig(mesh_shape=(1, 1), max_wait_s=0.0), mesh=mesh
     )
 
     def bad_split(out, n):
@@ -288,7 +288,7 @@ def test_engine_drift_replan_end_to_end(wl, params, mesh):
     engine = InferenceEngine.build(
         params, wl,
         EngineConfig(
-            n_cores=1, use_kernels="xla", distribution="uniform",
+            mesh_shape=(1, 1), use_kernels="xla", distribution="uniform",
             drift="replan",
             drift_options={"check_every": 2, "patience": 1, "cooldown": 2,
                            "threshold": 0.05},
@@ -319,7 +319,7 @@ def test_engine_drift_replan_end_to_end(wl, params, mesh):
 def test_stats_and_plan_report(wl, params, mesh):
     engine = InferenceEngine.build(
         params, wl,
-        EngineConfig(distribution="zipf:1.2", access="full", n_cores=1),
+        EngineConfig(distribution="zipf:1.2", access="full", mesh_shape=(1, 1)),
         mesh=mesh,
     )
     s = engine.stats()

@@ -31,7 +31,7 @@ def _engine(tables=None, *, validation="clip", check_every=2, **overrides):
 
     wl = small_workload("integ", batch=8)
     kwargs = dict(
-        planner="asymmetric", use_kernels="xla", n_cores=1,
+        planner="asymmetric", use_kernels="xla", mesh_shape=(1, 1),
         validation=validation, integrity="checksum",
         integrity_options={"check_every": check_every, "nan_guard": True},
         max_batch=8,
@@ -97,7 +97,7 @@ def test_abstract_pack_quarantines_without_source():
     wl = small_workload("integ-abs", batch=8)
     engine = InferenceEngine.build(
         "abstract", wl,
-        EngineConfig(planner="asymmetric", use_kernels="xla", n_cores=1,
+        EngineConfig(planner="asymmetric", use_kernels="xla", mesh_shape=(1, 1),
                      integrity="checksum"),
     )
     manifest = engine.manifest
@@ -123,7 +123,7 @@ def test_cache_region_rebuilt_from_repaired_chunk():
     engine = InferenceEngine.build(
         None, wl,
         EngineConfig(
-            planner="asymmetric", use_kernels="fused", n_cores=1,
+            planner="asymmetric", use_kernels="fused", mesh_shape=(1, 1),
             access="full", distribution="hotset:0.001:0.95",
             hardware_options={"l1_bytes": 0, "dma_latency": 1e-8},
             integrity="checksum",

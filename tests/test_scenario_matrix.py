@@ -36,7 +36,7 @@ def cell(request):
     name = request.param
     scenario = get_scenario(name, batch=BATCH)
     cfg = EngineConfig.from_dict(
-        {**SCENARIOS[name].default_config, "n_cores": 1}
+        {**SCENARIOS[name].default_config, "mesh_shape": (1, 1)}
     )
     engine = InferenceEngine.from_scenario(scenario, cfg)
     return scenario, engine
@@ -123,7 +123,7 @@ def test_forced_sparse_kernel_cell():
     whether the dedup'd gather runs one-hot or true-sparse, and both match
     the dense reference forward."""
     scenario = get_scenario("dlrm", batch=BATCH)
-    base = {**SCENARIOS["dlrm"].default_config, "n_cores": 1}
+    base = {**SCENARIOS["dlrm"].default_config, "mesh_shape": (1, 1)}
     outs = {}
     engines = {}
     rng_batch = scenario.sample_batch(np.random.default_rng(4), Zipf(1.2))
@@ -187,7 +187,7 @@ def test_arch_registry_configs_importable(arch):
 
 def test_build_scenario_by_name():
     eng = InferenceEngine.build_scenario(
-        "transformer", EngineConfig(n_cores=1), batch=8
+        "transformer", EngineConfig(mesh_shape=(1, 1)), batch=8
     )
     assert eng.config.model == "transformer"
     assert eng.scenario is not None

@@ -365,7 +365,7 @@ def small_engine():
     from repro.engine import EngineConfig, InferenceEngine
 
     wl = small_workload(batch=8)
-    config = EngineConfig(n_cores=1, max_batch=8, max_wait_s=0.0)
+    config = EngineConfig(mesh_shape=(1, 1), max_batch=8, max_wait_s=0.0)
     engine = InferenceEngine.build(None, wl, config)
     return engine, wl
 

@@ -116,7 +116,7 @@ def _engine(validation, **overrides):
 
     wl = small_workload("val", batch=8)
     kwargs = dict(
-        planner="asymmetric", use_kernels="xla", n_cores=1,
+        planner="asymmetric", use_kernels="xla", mesh_shape=(1, 1),
         validation=validation, max_batch=8,
     )
     kwargs.update(overrides)
